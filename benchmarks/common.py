@@ -1,0 +1,40 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.problem import ServerCaps
+from repro.core.profiler import make_paper_apps
+
+ALPHA, BETA = 1.4, 0.2  # paper §VI
+CONSTRAINED_CAPS = ServerCaps(r_cpu=30.0, r_mem=10.0)
+SUFFICIENT_CAPS = ServerCaps(r_cpu=120.0, r_mem=40.0)
+CONSTRAINED_LAM = (8.0, 7.0, 10.0, 15.0)
+SUFFICIENT_LAM = (6.0, 6.0, 6.0, 6.0)
+
+
+def paper_apps(lam=CONSTRAINED_LAM, xbar=(5.0, 5.0, 5.0, 5.0), fitted=False, seed=0):
+    return make_paper_apps(lam=lam, xbar=xbar, fitted=fitted, seed=seed)
+
+
+def mean_latency(apps, alloc) -> float:
+    lams = np.array([a.lam for a in apps])
+    if not (np.all(np.isfinite(alloc.ws)) and alloc.stable):
+        return float("inf")
+    return float(np.sum(lams * alloc.ws) / np.sum(lams))
+
+
+def total_power(alloc) -> float:
+    return float(np.sum(alloc.power_w))
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6  # us
+
+
+def emit(name: str, us: float, derived):
+    print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,47 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV lines
+# (plus human-readable detail) for: Table I, Figs 2-3, 6-10, 11-14, 15-22, the
+# M/M/N validation, the TPU fleet benchmark and the roofline report.
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        fig2_3_fit_quality,
+        fig6_10_sufficient,
+        fig11_14_constrained,
+        fig15_22_sweeps,
+        fleet_tpu,
+        mmn_validation,
+        roofline_report,
+        table1_fitting,
+    )
+
+    print("name,us_per_call,derived")
+    results = {}
+    for mod in (
+        table1_fitting,
+        fig2_3_fit_quality,
+        fig6_10_sufficient,
+        fig11_14_constrained,
+        fig15_22_sweeps,
+        mmn_validation,
+        fleet_tpu,
+        roofline_report,
+    ):
+        name = mod.__name__.split(".")[-1]
+        try:
+            results[name] = bool(mod.run())
+        except Exception as e:  # noqa: BLE001 — report, keep going
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            results[name] = False
+
+    print("\nsummary:")
+    for k, v in results.items():
+        print(f"  {k:24s} {'PASS' if v else 'FAIL'}")
+    sys.exit(0 if all(results.values()) else 1)
+
+
+if __name__ == "__main__":
+    main()

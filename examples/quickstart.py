@@ -1,0 +1,32 @@
+"""Quickstart: the paper's full pipeline in ~30 lines.
+
+  profile 4 heterogeneous apps -> fit Eq.(1) latency surfaces -> CRMS
+  (Algorithm 1 + 2) under the paper's §VI budgets -> inspect the allocation.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.crms import crms
+from repro.core.problem import ServerCaps
+from repro.core.profiler import make_paper_apps
+
+# 1. profile + fit (make_paper_apps(fitted=True) runs the §III measurement
+#    pipeline: noisy latency sweeps -> nonlinear least squares on Eq. (1))
+apps = make_paper_apps(lam=(8, 7, 10, 15), xbar=(5, 5, 5, 5), fitted=True, seed=0)
+for a in apps:
+    print(f"{a.name:18s} fitted kappa = ({a.kappa[0]:6.2f}, {a.kappa[1]:4.2f}, {a.kappa[2]:4.2f})"
+          f"  lam={a.lam}  mem in [{a.r_min}, {a.r_max}] GB")
+
+# 2. optimize under the edge server's budgets (30 cores, 10 GB)
+caps = ServerCaps(r_cpu=30.0, r_mem=10.0)
+alloc = crms(apps, caps, alpha=1.4, beta=0.2)
+
+# 3. inspect
+print(f"\nCRMS allocation  (utility {alloc.utility:.3f}, "
+      f"feasible={alloc.feasible}, stable={alloc.stable})")
+print(f"{'app':18s} {'N':>3s} {'cpu/ctr':>8s} {'mem/ctr':>8s} {'Ws':>8s} {'power':>7s}")
+for i, a in enumerate(apps):
+    print(f"{a.name:18s} {alloc.n[i]:3d} {alloc.r_cpu[i]:8.2f} {alloc.r_mem[i]:8.2f} "
+          f"{alloc.ws[i]:7.3f}s {alloc.power_w[i]:6.1f}W")
+print(f"{'total':18s} {np.sum(alloc.n):3d} {alloc.total_cpu():8.2f} {alloc.total_mem():8.2f}")

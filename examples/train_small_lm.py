@@ -1,0 +1,56 @@
+"""End-to-end training driver: a ~100M-parameter gemma-family LM trained for a
+few hundred steps with checkpointing and automatic failure recovery.
+
+Quick CPU demo (a ~6M model, 120 steps, loss curve + injected crash + resume):
+    PYTHONPATH=src python examples/train_small_lm.py
+
+The full ~100M / 300-step configuration (hours on CPU; minutes on a TPU host):
+    PYTHONPATH=src python examples/train_small_lm.py --full
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import get_config
+from repro.train.loop import Trainer, TrainerConfig, run_with_recovery
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="~100M params, 300 steps")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    base = get_config("gemma-2b")
+    if args.full:
+        # ~100M-parameter same-family config
+        cfg = dataclasses.replace(
+            base.reduced(), n_layers=12, d_model=768, n_heads=12, kv_heads=4,
+            head_dim=64, d_ff=2048, vocab=32768,
+        )
+        steps, seq, gb = args.steps or 300, 512, 16
+    else:
+        cfg = dataclasses.replace(base.reduced(), n_layers=4, d_model=256, d_ff=512, vocab=2048)
+        steps, seq, gb = args.steps or 120, 64, 8
+
+    n_params = cfg.total_params()
+    print(f"model: {n_params/1e6:.1f}M params ({cfg.n_layers}L d={cfg.d_model})")
+
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainerConfig(seq_len=seq, global_batch=gb, steps=steps,
+                             ckpt_every=max(steps // 4, 10), ckpt_dir=d, lr=1e-3,
+                             log_every=max(steps // 12, 5))
+        # inject a crash at 60% to demonstrate checkpoint/restart
+        history, restarts = run_with_recovery(
+            lambda: Trainer(cfg, tcfg), total_steps=steps, fail_at=int(steps * 0.6)
+        )
+        for h in history:
+            print(f"  step {h['step']:4d}  loss {h['loss']:7.4f}  gnorm {h['grad_norm']:7.3f}  "
+                  f"{h['dt']*1e3:6.0f} ms/step")
+        print(f"\nrecovered from {restarts} injected failure(s); "
+              f"final loss {history[-1]['loss']:.4f} (start {history[0]['loss']:.4f})")
+        assert history[-1]["loss"] < history[0]["loss"], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+# The paper's primary contribution — sensitivity-aware container resource
+# management (CRMS) — implemented as a composable JAX library.
+#
+# Numerical note: the paper's math (Erlang-C queueing, nonlinear least squares,
+# interior-point Newton) needs float64; we enable x64 here. All model-substrate
+# code (repro.models / repro.train / repro.serve) is explicitly dtype-annotated
+# (bf16/f32) so enabling x64 does not change what the dry-run lowers; this is
+# asserted by tests/test_dtype_discipline.py and by launch/dryrun.py.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.perf_model import (  # noqa: E402,F401
+    FAMILIES,
+    FitResult,
+    eq1_latency,
+    fit_family,
+    fit_best_family,
+)
+from repro.core.queueing import erlang_ws, erlang_ls, erlang_pi0  # noqa: E402,F401
+from repro.core.problem import App, ServerCaps, Allocation, utility  # noqa: E402,F401
+from repro.core.crms import algorithm1, crms  # noqa: E402,F401

@@ -1,0 +1,319 @@
+"""Baseline allocators from the paper's evaluation (§VI).
+
+SNFC        — scale-number-fixed-config: per-container quotas fixed, only the
+              pod count adapts (paper's sufficient-resource comparison;
+              SNFC1: c=1.8, m=0.35GB; SNFC2: c=1.0, m=r_max).
+RandomSearch— uniform sampling over (N, c, m) boxes [Bergstra-Bengio].
+GPBO        — Gaussian-process Bayesian optimization with EI acquisition.
+TPEBO       — tree-structured Parzen estimator BO.
+DRF         — dominant-resource-fairness progressive filling.
+
+All return `problem.Allocation` so benchmarks compare like-for-like.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import queueing
+from repro.core.batch_eval import evaluate_candidates
+from repro.core.problem import App, ServerCaps, Allocation, evaluate, service_rate
+from repro.core.solvers import phi, sp1_solve, sp2_bounds
+
+
+# ----------------------------------------------------------------------------
+# SNFC
+# ----------------------------------------------------------------------------
+def snfc(
+    apps: Sequence[App],
+    caps: ServerCaps,
+    alpha: float,
+    beta: float,
+    r_cpu_fixed: float = 1.8,
+    r_mem_fixed: float | str = 0.35,
+) -> Allocation:
+    """Fixed per-container config; choose each N by the same convex Φ search.
+    r_mem_fixed='rmax' reproduces SNFC2. Quotas are clipped into each app's
+    feasible memory interval (a container below r_min would OOM)."""
+    n, cs, ms = [], [], []
+    for app in apps:
+        m = app.r_max if r_mem_fixed == "rmax" else float(np.clip(r_mem_fixed, app.r_min, app.r_max))
+        c = float(r_cpu_fixed)
+        mu = float(service_rate(app, c, m))
+        lo, hi = sp2_bounds(app, caps, mu, c, m)
+        cand = np.arange(lo, hi + 1)
+        vals = [float(phi(app, caps, alpha, beta, int(k), mu, c)) for k in cand]
+        n.append(int(cand[int(np.argmin(vals))]))
+        cs.append(c)
+        ms.append(m)
+    # trim to fit global caps (drop containers from the least-loss app first)
+    n = np.asarray(n, dtype=int)
+    cs, ms = np.asarray(cs), np.asarray(ms)
+    for _ in range(int(np.sum(n))):
+        if np.sum(n * cs) <= caps.r_cpu and np.sum(n * ms) <= caps.r_mem:
+            break
+        losses = []
+        for i, app in enumerate(apps):
+            if n[i] <= 1:
+                losses.append(np.inf)
+                continue
+            mu = float(service_rate(app, cs[i], ms[i]))
+            cur = float(phi(app, caps, alpha, beta, int(n[i]), mu, cs[i]))
+            dec = float(phi(app, caps, alpha, beta, int(n[i] - 1), mu, cs[i]))
+            losses.append(dec - cur)
+        i = int(np.argmin(losses))
+        if not np.isfinite(losses[i]):
+            break
+        n[i] -= 1
+    return evaluate(apps, n, cs, ms, caps, alpha, beta)
+
+
+# ----------------------------------------------------------------------------
+# Random search
+# ----------------------------------------------------------------------------
+def _n_from_delta(apps, delta, c, m):
+    """Stability-aware parameterization shared by the search baselines: for
+    quotas (c, m) the container count is N = (stability floor) + Δ, Δ ≥ 0.
+    Sampling N directly makes the stable region measure-zero under tight
+    budgets; every practical tuner encodes the queue constraint this way."""
+    import jax.numpy as jnp
+
+    from repro.core.perf_model import eq1_latency
+
+    kappa = np.asarray([a.kappa for a in apps])
+    d_ms = np.asarray(eq1_latency((kappa[:, 0], kappa[:, 1], kappa[:, 2]), jnp.asarray(c), jnp.asarray(m)))
+    mu = 1000.0 / (np.asarray([a.xbar for a in apps]) * d_ms)
+    lam = np.asarray([a.lam for a in apps])
+    n_min = np.floor(lam / mu) + 1.0
+    return n_min + np.round(np.asarray(delta))
+
+
+def _sample_box(apps, caps, rng, size):
+    M = len(apps)
+    delta = rng.integers(0, 8, size=(size, M)).astype(float)
+    c = rng.uniform(0.1, 3.0, size=(size, M))
+    m = np.stack(
+        [rng.uniform(a.r_min, a.r_max, size=size) for a in apps], axis=1
+    )
+    n = _n_from_delta(apps, delta, c, m)
+    return n, c, m
+
+
+def random_search(
+    apps, caps: ServerCaps, alpha, beta, n_samples: int = 20000, seed: int = 0
+) -> Allocation:
+    rng = np.random.default_rng(seed)
+    n, c, m = _sample_box(apps, caps, rng, n_samples)
+    u, _, _ = evaluate_candidates(apps, caps, n, c, m, alpha, beta, hard=True)
+    best = int(np.argmin(u))
+    if not np.isfinite(u[best]):
+        # all infeasible — fall back to minimal configs
+        n0 = np.ones(len(apps), dtype=int)
+        return evaluate(apps, n0, [a.cpu_min for a in apps], [a.r_min for a in apps], caps, alpha, beta)
+    return evaluate(apps, n[best].astype(int), c[best], m[best], caps, alpha, beta)
+
+
+# ----------------------------------------------------------------------------
+# GP Bayesian optimization
+# ----------------------------------------------------------------------------
+def _normalize(x, lo, hi):
+    return (x - lo) / (hi - lo)
+
+
+def _repair(apps, caps, n, c, m):
+    """Project a candidate onto the budget: scale CPU quotas down to fit the
+    CPU cap; walk memory toward each app's r_min to fit the memory cap."""
+    n = np.asarray(n, dtype=float)
+    c = np.asarray(c, dtype=float).copy()
+    m = np.asarray(m, dtype=float).copy()
+    cpu_used = float(np.sum(n * c))
+    if cpu_used > caps.r_cpu:
+        c *= caps.r_cpu / cpu_used * 0.999
+    r_min = np.array([a.r_min for a in apps])
+    mem_used = float(np.sum(n * m))
+    if mem_used > caps.r_mem:
+        # shrink the (m - r_min) headroom uniformly
+        head = np.sum(n * (m - r_min))
+        need = mem_used - caps.r_mem * 0.999
+        if head > need > 0:
+            m = r_min + (m - r_min) * (1.0 - need / head)
+        else:
+            m = r_min.copy()
+    # if the container counts alone blow the memory budget, trim the largest
+    # footprint (the result may lose stability — recorded honestly upstream)
+    while float(np.sum(n * m)) > caps.r_mem * 0.999 and np.sum(n) > len(apps):
+        i = int(np.argmax(n * m * (n > 1)))
+        n[i] -= 1
+    return n, c, m
+
+
+def gpbo(
+    apps,
+    caps: ServerCaps,
+    alpha,
+    beta,
+    n_init: int = 16,
+    n_iters: int = 84,
+    seed: int = 0,
+) -> Allocation:
+    """GP + expected-improvement over the 3M-dim (N, c, m) space. The objective
+    uses the soft-penalty utility so the GP sees a smooth landscape."""
+    rng = np.random.default_rng(seed)
+    M = len(apps)
+    lo = np.concatenate([np.zeros(M), np.full(M, 0.1), np.array([a.r_min for a in apps])])
+    hi = np.concatenate([np.full(M, 8.0), np.full(M, 3.0), np.array([a.r_max for a in apps])])
+
+    def eval_soft(X):  # X: (B, 3M) in (Δ, c, m) space — see _n_from_delta
+        delta, c, m = X[:, :M], X[:, M : 2 * M], X[:, 2 * M :]
+        n = _n_from_delta(apps, delta, c, m)
+        u, _, _ = evaluate_candidates(apps, caps, n, c, m, alpha, beta, hard=False)
+        return u
+
+    X = rng.uniform(lo, hi, size=(n_init, 3 * M))
+    y = eval_soft(X)
+
+    ls = 0.2
+
+    def gp_posterior(Xn, yn, Xq):
+        def k(A, B):
+            d2 = ((A[:, None, :] - B[None, :, :]) ** 2).sum(-1)
+            return np.exp(-0.5 * d2 / ls**2)
+
+        K = k(Xn, Xn) + 1e-6 * np.eye(len(Xn))
+        L = np.linalg.cholesky(K)
+        alpha_v = np.linalg.solve(L.T, np.linalg.solve(L, yn))
+        Ks = k(Xn, Xq)
+        mu = Ks.T @ alpha_v
+        v = np.linalg.solve(L, Ks)
+        var = np.maximum(1.0 - (v**2).sum(0), 1e-12)
+        return mu, np.sqrt(var)
+
+    from scipy.stats import norm
+
+    for _ in range(n_iters):
+        Xn = _normalize(X, lo, hi)
+        mu_y, sd_y = float(np.mean(y)), float(np.std(y) + 1e-9)
+        yn = (y - mu_y) / sd_y
+        cand = rng.uniform(lo, hi, size=(512, 3 * M))
+        best_idx = int(np.argmin(y))
+        local = X[best_idx] + rng.normal(0, 0.05, size=(64, 3 * M)) * (hi - lo)
+        cand = np.vstack([cand, np.clip(local, lo, hi)])
+        mu_c, sd_c = gp_posterior(Xn, yn, _normalize(cand, lo, hi))
+        y_best = yn.min()
+        z = (y_best - mu_c) / sd_c
+        ei = sd_c * (z * norm.cdf(z) + norm.pdf(z))
+        x_next = cand[int(np.argmax(ei))]
+        X = np.vstack([X, x_next])
+        y = np.concatenate([y, eval_soft(x_next[None])])
+
+    # report the best *hard-feasible* evaluated point
+    c_all, m_all = X[:, M : 2 * M], X[:, 2 * M :]
+    n_all = _n_from_delta(apps, X[:, :M], c_all, m_all)
+    u_hard, _, _ = evaluate_candidates(apps, caps, n_all, c_all, m_all, alpha, beta, hard=True)
+    if np.all(~np.isfinite(u_hard)):
+        i = int(np.argmin(y))
+        n_i, c_i, m_i = _repair(apps, caps, n_all[i], c_all[i], m_all[i])
+        return evaluate(apps, n_i.astype(int), c_i, m_i, caps, alpha, beta)
+    i = int(np.argmin(u_hard))
+    return evaluate(apps, n_all[i].astype(int), c_all[i], m_all[i], caps, alpha, beta)
+
+
+# ----------------------------------------------------------------------------
+# TPE Bayesian optimization
+# ----------------------------------------------------------------------------
+def tpebo(
+    apps,
+    caps: ServerCaps,
+    alpha,
+    beta,
+    n_init: int = 16,
+    n_iters: int = 84,
+    gamma: float = 0.25,
+    seed: int = 0,
+) -> Allocation:
+    rng = np.random.default_rng(seed)
+    M = len(apps)
+    lo = np.concatenate([np.zeros(M), np.full(M, 0.1), np.array([a.r_min for a in apps])])
+    hi = np.concatenate([np.full(M, 8.0), np.full(M, 3.0), np.array([a.r_max for a in apps])])
+
+    def eval_soft(X):
+        delta, c, m = X[:, :M], X[:, M : 2 * M], X[:, 2 * M :]
+        n = _n_from_delta(apps, delta, c, m)
+        u, _, _ = evaluate_candidates(apps, caps, n, c, m, alpha, beta, hard=False)
+        return u
+
+    X = rng.uniform(lo, hi, size=(n_init, 3 * M))
+    y = eval_soft(X)
+
+    def kde_logpdf(samples, query):
+        # per-dim product of Gaussian KDEs (Scott's bandwidth), normalized space
+        s = _normalize(samples, lo, hi)
+        q = _normalize(query, lo, hi)
+        nS, D = s.shape
+        bw = max(nS ** (-1.0 / (D + 4)), 0.08)
+        lp = np.zeros(len(q))
+        for d in range(D):
+            diff = (q[:, None, d] - s[None, :, d]) / bw
+            comp = -0.5 * diff**2 - np.log(bw * np.sqrt(2 * np.pi))
+            lp += np.logaddexp.reduce(comp, axis=1) - np.log(nS)
+        return lp
+
+    for _ in range(n_iters):
+        order = np.argsort(y)
+        n_good = max(2, int(np.ceil(gamma * len(y))))
+        good, bad = X[order[:n_good]], X[order[n_good:]]
+        # sample candidates from the good KDE (perturbed good points)
+        base = good[rng.integers(0, len(good), size=64)]
+        cand = np.clip(base + rng.normal(0, 0.1, size=base.shape) * (hi - lo), lo, hi)
+        score = kde_logpdf(good, cand) - kde_logpdf(bad, cand)
+        x_next = cand[int(np.argmax(score))]
+        X = np.vstack([X, x_next])
+        y = np.concatenate([y, eval_soft(x_next[None])])
+
+    c_all, m_all = X[:, M : 2 * M], X[:, 2 * M :]
+    n_all = _n_from_delta(apps, X[:, :M], c_all, m_all)
+    u_hard, _, _ = evaluate_candidates(apps, caps, n_all, c_all, m_all, alpha, beta, hard=True)
+    if np.all(~np.isfinite(u_hard)):
+        i = int(np.argmin(y))
+        n_i, c_i, m_i = _repair(apps, caps, n_all[i], c_all[i], m_all[i])
+        return evaluate(apps, n_i.astype(int), c_i, m_i, caps, alpha, beta)
+    i = int(np.argmin(u_hard))
+    return evaluate(apps, n_all[i].astype(int), c_all[i], m_all[i], caps, alpha, beta)
+
+
+# ----------------------------------------------------------------------------
+# DRF — dominant resource fairness (progressive filling)
+# ----------------------------------------------------------------------------
+def drf(apps, caps: ServerCaps, alpha, beta) -> Allocation:
+    """Progressive filling on dominant shares. Each grant = one container at the
+    app's sufficient-resource quota. May leave apps unstable (ρ≥1) — exactly the
+    pathology the paper reports for APP2/APP4."""
+    M = len(apps)
+    demands = []
+    for app in apps:
+        c_star, m_star = sp1_solve(app, caps, alpha, beta)
+        demands.append((c_star, m_star))
+    n = np.zeros(M, dtype=int)
+    cpu_left, mem_left = caps.r_cpu, caps.r_mem
+    while True:
+        shares = [
+            max(n[i] * demands[i][0] / caps.r_cpu, n[i] * demands[i][1] / caps.r_mem)
+            for i in range(M)
+        ]
+        order = np.argsort(shares)
+        granted = False
+        for i in order:
+            c_i, m_i = demands[i]
+            if c_i <= cpu_left and m_i <= mem_left:
+                n[i] += 1
+                cpu_left -= c_i
+                mem_left -= m_i
+                granted = True
+                break
+        if not granted:
+            break
+    n = np.maximum(n, 1)
+    cs = np.array([d[0] for d in demands])
+    ms = np.array([d[1] for d in demands])
+    return evaluate(apps, n, cs, ms, caps, alpha, beta)

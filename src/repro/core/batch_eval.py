@@ -1,0 +1,97 @@
+"""Vectorized batched evaluation of Problem-P candidates.
+
+This is the compute hot-spot of the paper's search-based baselines (RS/GPBO/
+TPEBO evaluate thousands of candidate allocations) and of CRMS grid seeding;
+`repro.kernels.crms_grid` provides the Pallas TPU kernel version, with this
+module as its pure-jnp oracle (ref).
+
+A candidate is (N, r_cpu, r_mem) per app; utility is Eq. (8) with infeasible /
+unstable candidates mapped to +inf (or a soft penalty for BO).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import queueing
+from repro.core.perf_model import eq1_latency
+from repro.core.problem import App, ServerCaps
+
+
+def pack_apps(apps: Sequence[App]) -> dict:
+    return dict(
+        kappa=jnp.asarray([a.kappa for a in apps], jnp.float64),
+        lam=jnp.asarray([a.lam for a in apps], jnp.float64),
+        xbar=jnp.asarray([a.xbar for a in apps], jnp.float64),
+        r_min=jnp.asarray([a.r_min for a in apps], jnp.float64),
+        r_max=jnp.asarray([a.r_max for a in apps], jnp.float64),
+    )
+
+
+@partial(jax.jit, static_argnames=("hard",))
+def utility_batch(
+    packed: dict,
+    n: jnp.ndarray,  # (B, M) float
+    c: jnp.ndarray,  # (B, M)
+    m: jnp.ndarray,  # (B, M)
+    caps_cpu: float,
+    caps_mem: float,
+    power_span: float,
+    alpha: float,
+    beta: float,
+    hard: bool = True,
+    penalty: float = 1e4,
+):
+    """Returns (U (B,), ws (B,M), feasible (B,)). ``hard`` -> infeasible = inf;
+    else a smooth penalty (for Bayesian optimization)."""
+    d_ms = eq1_latency(
+        (packed["kappa"][:, 0], packed["kappa"][:, 1], packed["kappa"][:, 2]), c, m
+    )
+    mu = 1000.0 / (packed["xbar"] * d_ms)
+    ws = jax.vmap(jax.vmap(queueing.erlang_ws))(n, packed["lam"] * jnp.ones_like(n), mu)
+    rho = packed["lam"] / (n * mu)
+    dp = power_span * n * c / caps_cpu
+    # smooth surrogate on the unstable branch (50·rho^2 s) keeps the search
+    # landscape informative for BO instead of a flat +inf cliff
+    ws_soft = jnp.where(rho < 1.0 - 1e-9, jnp.where(jnp.isfinite(ws), ws, 50.0), 50.0 * rho**2)
+    terms = alpha * ws + beta * dp / packed["lam"]
+    terms_soft = alpha * ws_soft + beta * dp / packed["lam"]
+    u = jnp.sum(terms, axis=-1)
+
+    cpu_used = jnp.sum(n * c, axis=-1)
+    mem_used = jnp.sum(n * m, axis=-1)
+    bounds_ok = jnp.all((m >= packed["r_min"] - 1e-9) & (m <= packed["r_max"] + 1e-9), axis=-1)
+    feas = (cpu_used <= caps_cpu + 1e-9) & (mem_used <= caps_mem + 1e-9) & bounds_ok
+    stable = jnp.all(jnp.isfinite(ws), axis=-1)
+
+    if hard:
+        u = jnp.where(feas & stable, u, jnp.inf)
+    else:
+        viol = (
+            jnp.maximum(cpu_used - caps_cpu, 0.0) / caps_cpu
+            + jnp.maximum(mem_used - caps_mem, 0.0) / caps_mem
+        )
+        u = jnp.sum(terms_soft, axis=-1) + penalty * viol
+    return u, ws, feas & stable
+
+
+def evaluate_candidates(apps, caps: ServerCaps, n, c, m, alpha, beta, hard=True):
+    """NumPy-friendly wrapper."""
+    packed = pack_apps(apps)
+    u, ws, feas = utility_batch(
+        packed,
+        jnp.asarray(np.asarray(n, dtype=float)),
+        jnp.asarray(np.asarray(c, dtype=float)),
+        jnp.asarray(np.asarray(m, dtype=float)),
+        float(caps.r_cpu),
+        float(caps.r_mem),
+        float(caps.power.span),
+        float(alpha),
+        float(beta),
+        hard=hard,
+    )
+    return np.asarray(u), np.asarray(ws), np.asarray(feas)

@@ -1,0 +1,194 @@
+"""CRMS — the paper's two-stage Container-based Resource Management Scheme (§V).
+
+``algorithm1``  : Efficient Server Resource Management in Sufficient Resource
+                  Condition (paper Algorithm 1): per-app SP1 convex solve +
+                  SP2 integer ternary search -> ideal configs c_i*.
+``crms``        : Algorithm 2: if the ideal demand violates the global budgets,
+                  fix N* and solve convex P1; then greedy refinement that
+                  repeatedly tries decrementing each app's N by one and
+                  re-solving P1, accepting the best improving move.
+``QuasiDynamicAllocator`` : the §V-B "quasi-dynamic" driver — re-optimizes only
+                  when monitored arrival rates drift past a threshold.
+
+Robustness extension beyond the paper (documented in DESIGN.md): if P1 is
+infeasible at N* (the paper implicitly assumes it is not), we pre-trim N
+greedily by largest resource footprint until a feasible interior point exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import queueing
+from repro.core.problem import Allocation, App, ServerCaps, evaluate, service_rate
+from repro.core.solvers import p1_solve, sp1_solve, sp2_ternary
+
+
+@dataclasses.dataclass
+class IdealConfig:
+    r_cpu: float
+    r_mem: float
+    n: int
+    mu: float
+
+
+def algorithm1(apps: Sequence[App], caps: ServerCaps, alpha: float, beta: float):
+    """Paper Algorithm 1 — per-app ideal configs under sufficient resources."""
+    out = []
+    for app in apps:
+        c_star, m_star = sp1_solve(app, caps, alpha, beta)
+        mu_star = float(service_rate(app, c_star, m_star))
+        n_star = sp2_ternary(app, caps, alpha, beta, mu_star, c_star, m_star)
+        out.append(IdealConfig(r_cpu=c_star, r_mem=m_star, n=n_star, mu=mu_star))
+    return out
+
+
+def _stability_floor(app: App, r_cpu: float, r_mem: float) -> int:
+    mu = float(service_rate(app, r_cpu, r_mem))
+    return queueing.stability_lower_bound(app.lam, mu)
+
+
+def _pretrim_n(apps, caps, n, ideal):
+    """Decrement N until a feasible interior point for P1 can exist. Greedy on
+    the largest (cpu-share + mem-share) footprint, respecting stability floors
+    computed at the most favourable quota (the app's ideal one)."""
+    n = np.asarray(n, dtype=int).copy()
+    r_min = np.array([a.r_min for a in apps])
+    floors = np.array([_stability_floor(a, ic.r_cpu, a.r_max) for a, ic in zip(apps, ideal)])
+    for _ in range(int(np.sum(n)) + 1):
+        mem_need = float(np.sum(n * r_min))
+        if mem_need <= 0.97 * caps.r_mem:
+            return n, True
+        # largest mem footprint with slack above its floor
+        order = np.argsort(-(n * r_min))
+        moved = False
+        for i in order:
+            if n[i] > max(floors[i], 1):
+                n[i] -= 1
+                moved = True
+                break
+        if not moved:
+            return n, False
+    return n, False
+
+
+def crms(
+    apps: Sequence[App],
+    caps: ServerCaps,
+    alpha: float,
+    beta: float,
+    max_refine_iters: int = 64,
+    solver=p1_solve,
+) -> Allocation:
+    """Paper Algorithm 2 (CRMS). Returns the final feasible Allocation."""
+    ideal = algorithm1(apps, caps, alpha, beta)
+    n = np.array([ic.n for ic in ideal], dtype=int)
+    c = np.array([ic.r_cpu for ic in ideal])
+    m = np.array([ic.r_mem for ic in ideal])
+    c_hint = c.copy()
+
+    total_cpu = float(np.sum(n * c))
+    total_mem = float(np.sum(n * m))
+    over = total_cpu > caps.r_cpu or total_mem > caps.r_mem
+
+    history = [{"stage": "algorithm1", "n": n.tolist(), "U": None}]
+
+    if over:
+        n, ok = _pretrim_n(apps, caps, n, ideal)
+        res = solver(apps, caps, n, alpha, beta, c_hint=c_hint)
+        if not res.converged:
+            # fall back: keep trimming until P1 converges
+            for _ in range(int(np.sum(n))):
+                floors = [max(_stability_floor(a, ch, a.r_max), 1) for a, ch in zip(apps, c_hint)]
+                cand = np.argsort(-(n * np.array([a.r_min for a in apps])))
+                moved = False
+                for i in cand:
+                    if n[i] > floors[i]:
+                        n[i] -= 1
+                        moved = True
+                        break
+                if not moved:
+                    break
+                res = solver(apps, caps, n, alpha, beta, c_hint=c_hint)
+                if res.converged:
+                    break
+        if res.converged:
+            c, m = res.r_cpu, res.r_mem
+        history.append({"stage": "p1_initial", "n": n.tolist(), "U": res.utility})
+
+    cur = evaluate(apps, n, c, m, caps, alpha, beta)
+
+    # Greedy refinement (Algorithm 2 lines 8-22). Beyond-paper strengthening
+    # (DESIGN.md §8): the paper only tries N_i - 1; we also try N_i + 1 —
+    # the decomposition's SP1-then-SP2 ordering can land below the joint
+    # optimum in N, and increments are equally cheap to evaluate.
+    for _ in range(max_refine_iters):
+        best = None
+        for i in range(len(apps)):
+            floor_i = max(_stability_floor(apps[i], c_hint[i], apps[i].r_max), 1)
+            for delta in (-1, +1):
+                if n[i] + delta < floor_i:
+                    continue
+                n_hat = n.copy()
+                n_hat[i] += delta
+                res = solver(apps, caps, n_hat, alpha, beta, c_hint=c_hint)
+                if not res.converged:
+                    continue
+                cand = evaluate(apps, n_hat, res.r_cpu, res.r_mem, caps, alpha, beta)
+                if not (cand.feasible and cand.stable):
+                    continue
+                if best is None or cand.utility < best.utility:
+                    best = cand
+        if best is not None and best.utility < cur.utility - 1e-12:
+            cur = best
+            n = best.n.copy()
+            history.append({"stage": "greedy", "n": n.tolist(), "U": best.utility})
+        else:
+            break
+
+    # If the sufficient-resource config was feasible from the start, Algorithm 2
+    # still applies P1 once over the fixed N* to tighten quotas under the caps.
+    if not over:
+        res = solver(apps, caps, n, alpha, beta, c_hint=c_hint)
+        if res.converged:
+            cand = evaluate(apps, n, res.r_cpu, res.r_mem, caps, alpha, beta)
+            if cand.feasible and cand.stable and cand.utility < cur.utility:
+                cur = cand
+
+    cur.meta["history"] = history
+    cur.meta["ideal"] = [dataclasses.asdict(ic) for ic in ideal]
+    return cur
+
+
+class QuasiDynamicAllocator:
+    """§V-B quasi-dynamic execution: cache the allocation, re-run Algorithm 2
+    only when monitored λ's drift by more than ``threshold`` (relative) or the
+    app mix changes."""
+
+    def __init__(self, caps: ServerCaps, alpha: float, beta: float, threshold: float = 0.15):
+        self.caps = caps
+        self.alpha = alpha
+        self.beta = beta
+        self.threshold = threshold
+        self._lam = None
+        self._names = None
+        self._alloc: Allocation | None = None
+        self.reoptimizations = 0
+
+    def should_reoptimize(self, apps: Sequence[App]) -> bool:
+        names = tuple(a.name for a in apps)
+        lam = np.array([a.lam for a in apps])
+        if self._alloc is None or names != self._names:
+            return True
+        drift = np.abs(lam - self._lam) / np.maximum(self._lam, 1e-9)
+        return bool(np.any(drift > self.threshold))
+
+    def allocate(self, apps: Sequence[App]) -> Allocation:
+        if self.should_reoptimize(apps):
+            self._alloc = crms(apps, self.caps, self.alpha, self.beta)
+            self._lam = np.array([a.lam for a in apps])
+            self._names = tuple(a.name for a in apps)
+            self.reoptimizations += 1
+        return self._alloc

@@ -1,0 +1,55 @@
+"""Incremental power model (paper §IV-A, Eqs. 2-3).
+
+Power is linear in the *allocated CPU-capacity fraction* — the control knob the
+container runtime exposes — not in frequency. The TPU binding uses the same
+form with chips-per-replica as the capacity unit.
+
+Edge defaults follow the paper's i7-9700 testbed; TPU defaults are per-chip
+v5e figures (documented assumptions, see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    p_idle: float  # W, whole server (edge) or per-pool baseline (TPU)
+    p_full: float  # W at the reference full-load state
+
+    @property
+    def span(self) -> float:
+        return self.p_full - self.p_idle
+
+
+# Paper testbed: Intel i7-9700 edge server (8 cores).  Idle/full measured-style
+# constants; only the span enters the objective (idle is dropped, §IV-A).
+EDGE_POWER = PowerModel(p_idle=40.0, p_full=190.0)
+
+# TPU v5e: ~75 W idle, ~200 W active per chip; a 256-chip pod spans
+# 256*(200-75) = 32 kW between idle and full allocation.
+TPU_V5E_CHIP_POWER = PowerModel(p_idle=75.0, p_full=200.0)
+
+
+def cpu_fraction(n_containers, r_cpu, total_cpu):
+    """Eq. (3): U_i = N_i r_i / R̄."""
+    return n_containers * r_cpu / total_cpu
+
+
+def delta_power(n_containers, r_cpu, total_cpu, power: PowerModel = EDGE_POWER):
+    """Eq. (2): ΔP_i = (P_full - P_idle) U_i  [W]."""
+    return power.span * cpu_fraction(n_containers, r_cpu, total_cpu)
+
+
+def delta_power_per_container(r_cpu, total_cpu, power: PowerModel = EDGE_POWER):
+    """Eq. (17): Δp_i for a single container."""
+    return power.span * r_cpu / total_cpu
+
+
+def pod_power(n_chips_allocated, power: PowerModel = TPU_V5E_CHIP_POWER):
+    """TPU binding: incremental pod power [W] for allocating ``n`` chips
+    (span is per-chip, so ΔP = span * n — the same linear-in-capacity form
+    as Eq. 2 with R̄ = 1 chip as the capacity unit)."""
+    return power.span * jnp.asarray(n_chips_allocated, jnp.float64)

@@ -1,0 +1,151 @@
+"""Problem P (paper §IV-C): joint latency+energy MINLP over container configs.
+
+    min_{N_i, r_cpu_i, r_mem_i}  Σ_i  α·Ws(N_i, λ_i, μ_i) + β·ΔP_i/λ_i
+    s.t.  Σ N_i r_cpu_i ≤ R̄cpu,  Σ N_i r_mem_i ≤ R̄mem,
+          r_min_i ≤ r_mem_i ≤ r_max_i.
+
+Latency d is in ms (perf_model), Ws in seconds, power in W. μ = 1000/(x̄·d).
+NP-hardness (Theorem 1) is by reduction from unbounded multi-dim knapsack;
+`tests/test_theorems.py::test_np_hardness_reduction` exercises the constructed
+special case.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import queueing
+from repro.core.perf_model import eq1_latency
+from repro.core.power import EDGE_POWER, PowerModel, delta_power
+
+
+@dataclasses.dataclass(frozen=True)
+class App:
+    """One heterogeneous application (paper: a container cluster workload)."""
+
+    name: str
+    lam: float  # request arrival rate [req/s]
+    xbar: float  # mean images (TPU binding: kilo-tokens) per request
+    kappa: tuple  # (k1, k2, k3) of Eq. (1), k1>0 convention
+    r_min: float  # memory lower bound [GB] (OOM threshold)
+    r_max: float  # memory saturation point [GB]
+    cpu_min: float = 0.05  # smallest meaningful CPU quota [cores]
+    cpu_max: float = 16.0  # largest per-container quota [cores]
+
+    def with_lam(self, lam: float) -> "App":
+        return dataclasses.replace(self, lam=lam)
+
+    def with_xbar(self, xbar: float) -> "App":
+        return dataclasses.replace(self, xbar=xbar)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerCaps:
+    """Global resource budget (edge server or TPU pod)."""
+
+    r_cpu: float  # total CPU capacity [cores]  (TPU: chips)
+    r_mem: float  # total memory [GB]           (TPU: HBM GB)
+    power: PowerModel = EDGE_POWER
+
+
+@dataclasses.dataclass
+class Allocation:
+    """A full solution to Problem P."""
+
+    n: np.ndarray  # (M,) int container counts
+    r_cpu: np.ndarray  # (M,) per-container CPU quota
+    r_mem: np.ndarray  # (M,) per-container memory [GB]
+    utility: float = np.nan
+    ws: np.ndarray | None = None  # (M,) per-app response time [s]
+    power_w: np.ndarray | None = None  # (M,) per-app incremental power [W]
+    feasible: bool = True
+    stable: bool = True
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def total_cpu(self) -> float:
+        return float(np.sum(self.n * self.r_cpu))
+
+    def total_mem(self) -> float:
+        return float(np.sum(self.n * self.r_mem))
+
+
+def latency_ms(app: App, r_cpu, r_mem):
+    """Eq. (1) per-image latency for an app at a given allocation."""
+    return eq1_latency(jnp.asarray(app.kappa, jnp.float64), r_cpu, r_mem)
+
+
+def service_rate(app: App, r_cpu, r_mem):
+    """Eq. (6): μ = 1/(x̄ d) with d converted ms→s."""
+    d_s = latency_ms(app, r_cpu, r_mem) * 1e-3
+    return 1.0 / (app.xbar * d_s)
+
+
+def app_terms(app: App, n, r_cpu, r_mem, caps: ServerCaps, alpha: float, beta: float):
+    """Returns (ws_seconds, dP_watts, utility_term) for one app."""
+    mu = service_rate(app, r_cpu, r_mem)
+    ws = queueing.erlang_ws(n, app.lam, mu)
+    dp = delta_power(n, r_cpu, caps.r_cpu, caps.power)
+    term = alpha * ws + beta * dp / app.lam
+    return ws, dp, term
+
+
+def utility(
+    apps: Sequence[App],
+    n,
+    r_cpu,
+    r_mem,
+    caps: ServerCaps,
+    alpha: float,
+    beta: float,
+):
+    """Objective U_p of Eq. (8). Returns (U_p, per-app Ws, per-app ΔP)."""
+    total = 0.0
+    ws_all, dp_all = [], []
+    for i, app in enumerate(apps):
+        ws, dp, term = app_terms(app, n[i], r_cpu[i], r_mem[i], caps, alpha, beta)
+        ws_all.append(ws)
+        dp_all.append(dp)
+        total = total + term
+    return total, jnp.stack(ws_all), jnp.stack(dp_all)
+
+
+def check_feasible(apps, n, r_cpu, r_mem, caps: ServerCaps, tol: float = 1e-6):
+    """Constraints (9)-(11) + queue stability. Returns dict of booleans."""
+    n = np.asarray(n)
+    r_cpu = np.asarray(r_cpu)
+    r_mem = np.asarray(r_mem)
+    cpu_ok = float(np.sum(n * r_cpu)) <= caps.r_cpu * (1 + tol)
+    mem_ok = float(np.sum(n * r_mem)) <= caps.r_mem * (1 + tol)
+    bounds_ok = all(
+        (a.r_min - tol <= m <= a.r_max + tol) and (c > 0) for a, c, m in zip(apps, r_cpu, r_mem)
+    )
+    stable = all(
+        app.lam < nn * float(service_rate(app, c, m))
+        for app, nn, c, m in zip(apps, n, r_cpu, r_mem)
+    )
+    return {
+        "cpu": cpu_ok,
+        "mem": mem_ok,
+        "bounds": bounds_ok,
+        "stable": stable,
+        "all": cpu_ok and mem_ok and bounds_ok,
+    }
+
+
+def evaluate(apps, n, r_cpu, r_mem, caps, alpha, beta) -> Allocation:
+    """Package a candidate solution with metrics + feasibility flags."""
+    u, ws, dp = utility(apps, np.asarray(n), np.asarray(r_cpu), np.asarray(r_mem), caps, alpha, beta)
+    feas = check_feasible(apps, n, r_cpu, r_mem, caps)
+    return Allocation(
+        n=np.asarray(n, dtype=int),
+        r_cpu=np.asarray(r_cpu, dtype=float),
+        r_mem=np.asarray(r_mem, dtype=float),
+        utility=float(u),
+        ws=np.asarray(ws, dtype=float),
+        power_w=np.asarray(dp, dtype=float),
+        feasible=feas["all"],
+        stable=feas["stable"],
+    )

@@ -1,0 +1,230 @@
+"""Pure-jnp oracles for the Pallas kernels (and the production fallback on
+non-TPU backends — the dry-run lowers these; they share the kernels' FLOP and
+memory structure).
+
+flash_attention: streaming-softmax forward + blockwise-recompute backward via
+jax.custom_vjp. The naive scan-VJP backward of a streaming forward saves every
+kv-step accumulator (observed ~100 GB/layer on command-r train_4k); this
+custom backward recomputes score blocks instead, exactly like FlashAttention's
+two-pass dq / dkv backward.
+
+Shapes: q (B, Sq, KV, G, hd); k/v (B, Skv, KV, hd). GQA via the (KV, G)
+grouped layout; MQA is KV=1.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_QB = 512
+DEFAULT_KB = 1024
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def _fwd_streaming(q, k, v, causal: bool, qb: int, kb: int):
+    """Returns (out (B,Sq,KV,G,hd) f32, lse (B,KV,G,Sq) f32)."""
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    scale = hd**-0.5
+    qb = min(qb, Sq)
+    kb = min(kb, Skv)
+    qp_full, pad_q = _pad_to(q, 1, qb)
+    kp_full, pad_k = _pad_to(k, 1, kb)
+    vp_full, _ = _pad_to(v, 1, kb)
+    n_qb = qp_full.shape[1] // qb
+    n_kb = kp_full.shape[1] // kb
+    qs = qp_full.reshape(B, n_qb, qb, KV, G, hd)
+    ks = kp_full.reshape(B, n_kb, kb, KV, hd)
+    vs = vp_full.reshape(B, n_kb, kb, KV, hd)
+
+    def q_step(qi):
+        q_i = qs[:, qi]
+        q_pos = qi * qb + jnp.arange(qb, dtype=jnp.int32)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_pos = ki * kb + jnp.arange(kb, dtype=jnp.int32)
+            s = jnp.einsum("bqkgh,btkh->bkgqt", q_i, ks[:, ki],
+                           preferred_element_type=jnp.float32) * scale
+            mask = (k_pos < Skv)[None, :]
+            if causal:
+                mask = mask & (q_pos[:, None] >= k_pos[None, :])
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(vs.dtype), vs[:, ki],
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((B, KV, G, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_kb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out.transpose(0, 3, 1, 2, 4), lse  # (B,qb,KV,G,hd), (B,KV,G,qb)
+
+    outs, lses = jax.lax.map(q_step, jnp.arange(n_qb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, n_qb * qb, KV, G, hd)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, n_qb * qb)
+    if pad_q:
+        out = out[:, :Sq]
+        lse = lse[..., :Sq]
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, qb: int = DEFAULT_QB, kb: int = DEFAULT_KB):
+    out, _ = _fwd_streaming(q, k, v, causal, qb, kb)
+    return out.astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, causal, qb, kb):
+    out, lse = _fwd_streaming(q, k, v, causal, qb, kb)
+    return out.astype(q.dtype), (q, k, v, out.astype(q.dtype), lse)
+
+
+def _flash_bwd(causal, qb, kb, res, dout):
+    """Two-pass blockwise backward (FlashAttention-style recompute)."""
+    q, k, v, out, lse = res
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    scale = hd**-0.5
+    qb_ = min(qb, Sq)
+    kb_ = min(kb, Skv)
+
+    doutf = dout.astype(jnp.float32)
+    # D_i = rowsum(dout * out)
+    Drow = jnp.einsum("bqkgh,bqkgh->bkgq", doutf, out.astype(jnp.float32))
+
+    qp, pad_q = _pad_to(q, 1, qb_)
+    dop, _ = _pad_to(dout, 1, qb_)
+    kp, pad_k = _pad_to(k, 1, kb_)
+    vp, _ = _pad_to(v, 1, kb_)
+    lsep, _ = _pad_to(lse.reshape(B, KV, G, Sq), 3, qb_)
+    Drowp, _ = _pad_to(Drow, 3, qb_)
+    n_qb = qp.shape[1] // qb_
+    n_kb = kp.shape[1] // kb_
+    qs = qp.reshape(B, n_qb, qb_, KV, G, hd)
+    dos = dop.reshape(B, n_qb, qb_, KV, G, hd)
+    ks = kp.reshape(B, n_kb, kb_, KV, hd)
+    vs = vp.reshape(B, n_kb, kb_, KV, hd)
+    lses = lsep.reshape(B, KV, G, n_qb, qb_)
+    Ds = Drowp.reshape(B, KV, G, n_qb, qb_)
+
+    def block_p(qi, ki, q_i):
+        """Recompute p (B,KV,G,qb,kb) for a (qi, ki) tile."""
+        q_pos = qi * qb_ + jnp.arange(qb_, dtype=jnp.int32)
+        k_pos = ki * kb_ + jnp.arange(kb_, dtype=jnp.int32)
+        s = jnp.einsum("bqkgh,btkh->bkgqt", q_i, ks[:, ki],
+                       preferred_element_type=jnp.float32) * scale
+        mask = (k_pos < Skv)[None, :] & (q_pos < Sq)[:, None]
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jnp.exp(s - lses[:, :, :, qi][..., None])
+        return jnp.where(mask[None, None, None], p, 0.0), s
+
+    # pass 1: dq — stream kv per q block
+    def dq_step(qi):
+        q_i = qs[:, qi]
+        do_i = dos[:, qi].astype(jnp.float32)
+
+        def kv_step(dq_acc, ki):
+            p, _ = block_p(qi, ki, q_i)
+            dp = jnp.einsum("bqkgh,btkh->bkgqt", do_i, vs[:, ki].astype(jnp.float32))
+            ds = p * (dp - Ds[:, :, :, qi][..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bkgqt,btkh->bqkgh", ds, ks[:, ki].astype(jnp.float32))
+            return dq_acc, None
+
+        dq0 = jnp.zeros((B, qb_, KV, G, hd), jnp.float32)
+        dq_i, _ = jax.lax.scan(kv_step, dq0, jnp.arange(n_kb))
+        return dq_i
+
+    dq = jax.lax.map(dq_step, jnp.arange(n_qb))
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(B, n_qb * qb_, KV, G, hd)
+    if pad_q:
+        dq = dq[:, :Sq]
+
+    # pass 2: dk/dv — stream q per kv block
+    def dkv_step(ki):
+        def q_step(carry, qi):
+            dk_acc, dv_acc = carry
+            q_i = qs[:, qi]
+            do_i = dos[:, qi].astype(jnp.float32)
+            p, _ = block_p(qi, ki, q_i)
+            # dv: sum over G of p^T dout
+            dv_acc = dv_acc + jnp.einsum("bkgqt,bqkgh->btkh", p, do_i)
+            dp = jnp.einsum("bqkgh,btkh->bkgqt", do_i, vs[:, ki].astype(jnp.float32))
+            ds = p * (dp - Ds[:, :, :, qi][..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum("bkgqt,bqkgh->btkh", ds, q_i.astype(jnp.float32))
+            return (dk_acc, dv_acc), None
+
+        dk0 = jnp.zeros((B, kb_, KV, hd), jnp.float32)
+        dv0 = jnp.zeros((B, kb_, KV, hd), jnp.float32)
+        (dk_i, dv_i), _ = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(n_qb))
+        return dk_i, dv_i
+
+    dks, dvs = jax.lax.map(dkv_step, jnp.arange(n_kb))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, n_kb * kb_, KV, hd)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, n_kb * kb_, KV, hd)
+    if pad_k:
+        dk = dk[:, :Skv]
+        dv = dv[:, :Skv]
+
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_naive(q, k, v, causal: bool = True):
+    """O(S^2)-memory oracle (tests only): materializes the score matrix."""
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q.astype(jnp.float32), k.astype(jnp.float32)) * hd**-0.5
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# SSD chunk oracle (Mamba2) — re-exported from the model layer
+# ----------------------------------------------------------------------------
+def ssd_chunks(xh, bmat, cmat, da, chunk: int = 256):
+    from repro.models.mamba import _ssd_chunks_ref
+
+    return _ssd_chunks_ref(xh, bmat, cmat, da, chunk)
+
+
+# ----------------------------------------------------------------------------
+# CRMS candidate-grid utility oracle (the paper's own hot loop)
+# ----------------------------------------------------------------------------
+def crms_grid_utility(kappa, lam, xbar, n, c, m, caps_cpu, power_span, alpha, beta):
+    """Vectorized Eq.(1) -> mu -> Erlang-C Ws -> utility for candidate grids.
+    kappa: (M,3); n/c/m: (B,M). Returns per-candidate utility (B,)."""
+    from repro.core import queueing
+    from repro.core.perf_model import eq1_latency
+
+    d_ms = eq1_latency((kappa[:, 0], kappa[:, 1], kappa[:, 2]), c, m)
+    mu = 1000.0 / (xbar * d_ms)
+    ws = jax.vmap(jax.vmap(queueing.erlang_ws))(n, jnp.broadcast_to(lam, n.shape), mu)
+    dp = power_span * n * c / caps_cpu
+    return jnp.sum(alpha * ws + beta * dp / lam, axis=-1)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk computation.
+
+Per (batch, head, chunk) tile it computes the quadratic "dual form":
+    y_diag = (C B^T ⊙ exp(segsum(dt A))) · (dt x)
+and the chunk's state contribution
+    S_chunk = (B ⊙ decay_to_end)^T · (dt x)
+The O(nc) inter-chunk state recurrence stays in jnp (ops.py) — it is tiny.
+
+Blocks: x (Q, P), B/C (Q, N), da (Q,) with Q=chunk length (128/256), P=head
+dim, N=d_state: the (Q,Q) score tile and (P,N) state tile both sit in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, b_ref, c_ref, da_ref, y_ref, st_ref, *, q_len: int):
+    x = x_ref[...].astype(jnp.float32)  # (Q, P)
+    bm = b_ref[...].astype(jnp.float32)  # (Q, N)
+    cm = c_ref[...].astype(jnp.float32)  # (Q, N)
+    da = da_ref[...].astype(jnp.float32)  # (Q, 1)  [kept 2D for TPU layout]
+    da = da[:, 0]
+
+    cum = jnp.cumsum(da)
+    seg = cum[:, None] - cum[None, :]  # (Q, Q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (q_len, q_len), 1
+    )
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q)
+    y = jax.lax.dot_general(
+        scores * L, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (Q,)
+    bw = bm * decay_to_end[:, None]  # (Q, N)
+    st = jax.lax.dot_general(
+        x, bw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (P, N)
+    st_ref[...] = st.astype(st_ref.dtype)
+
+
+def ssd_chunk_fwd(xh, bmat, cmat, da, *, chunk: int = 128, interpret: bool = False):
+    """xh (B,S,H,P) f32; bmat/cmat (B,S,N); da (B,S,H).
+    Returns y_diag (B,S,H,P) f32 and states (B, nc, H, P, N) f32."""
+    B, S, H, P = xh.shape
+    N = bmat.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    kernel = functools.partial(_ssd_chunk_kernel, q_len=Q)
+    # reshape to chunk-major layouts the BlockSpecs can tile
+    x_r = xh.transpose(0, 2, 1, 3)  # (B,H,S,P)
+    da_r = da.transpose(0, 2, 1)[..., None]  # (B,H,S,1)
+
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((None, None, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((None, Q, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((None, Q, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((None, None, Q, 1), lambda b, h, ci: (b, h, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((None, None, None, P, N), lambda b, h, ci: (b, ci, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_r, bmat, cmat, da_r)
+    return y.transpose(0, 2, 1, 3), st

@@ -1,0 +1,452 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+placeholder devices; record memory analysis, cost analysis and the collective
+schedule for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun.json
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import/init (device count locks on first use).
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cell_is_runnable, get_config, ARCH_IDS
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+from repro.sharding.rules import tree_shardings
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind (per-device payload
+    convention; see DESIGN.md §7)."""
+    out: dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(shape_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    seq, gbs, kind = SHAPES[shape_name]
+    n_active = cfg.active_params()
+    if kind == "train":
+        return 6.0 * n_active * seq * gbs
+    if kind == "prefill":
+        return 2.0 * n_active * seq * gbs
+    return 2.0 * n_active * gbs  # decode: one token per sequence
+
+
+def _sliced_struct(tree):
+    """Drop the leading (scan/repeat) axis of every leaf ShapeDtypeStruct."""
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree)
+
+
+def stage_body_metrics(cfg, shape_name: str, mesh, runtime, serve_dtype: str = "bf16",
+                       model_only: bool = False):
+    """Lower each stage body standalone and return per-stage (repeat, flops,
+    bytes, collective bytes) — XLA's cost analysis counts while-loop bodies
+    ONCE regardless of trip count (verified empirically), so the roofline
+    scales these by (repeat - 1) on top of the full-step numbers."""
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import Stage
+    from repro.launch import specs as S
+    from repro.models.model import stage_body
+    from repro.sharding.rules import param_spec
+
+    seq, gbs, kind = SHAPES[shape_name]
+    S_x = 1 if kind == "decode" else seq
+    if kind == "train":
+        dt = jnp.float32
+    else:
+        dt = jnp.float8_e4m3fn if serve_dtype == "f8" else jnp.bfloat16
+    axes = runtime.data_axes
+    bsp = S._maybe(axes, gbs, mesh)
+    model_axis = runtime.model_axis
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    x_struct = jax.ShapeDtypeStruct((gbs, S_x, cfg.d_model), jnp.bfloat16)
+    x_shard = ns(P(bsp, None, None))
+    positions = jnp.arange(S_x, dtype=jnp.int32)[None, :] if kind != "decode" else None
+
+    mem_struct = mem_shard = None
+    if cfg.family == "vlm":
+        mem_struct = jax.ShapeDtypeStruct((gbs, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        mem_shard = ns(P(bsp, None, None))
+    elif cfg.family == "audio":
+        frames = max(seq // cfg.enc_frames_ratio, 8)
+        mem_struct = jax.ShapeDtypeStruct((gbs, frames, cfg.d_model), jnp.bfloat16)
+        mem_shard = ns(P(bsp, None, None))
+
+    params = S.param_structs(cfg, dt)
+    stages = [(f"stage{i}", st) for i, st in enumerate(cfg.stages())]
+    if cfg.family == "audio" and kind != "decode":
+        # decode consumes a memoized encoder output — no encoder stage runs
+        stages.append(("encoder", Stage(blocks=(("self_attn", {"causal": False}), ("mlp", {})),
+                                        repeat=cfg.enc_layers)))
+
+    out = []
+    for pname, stage in stages:
+        p_slice = _sliced_struct(params[pname])
+        p_shard = jax.tree_util.tree_map(
+            lambda l: ns(param_spec(l.shape, mesh, skip_leading=0,
+                                    data_axis=None if model_only else "data",
+                                    model_axis=model_axis, prefer_first=model_only)),
+            p_slice,
+        )
+        is_enc = pname == "encoder"
+        cache_slice = cache_shard = None
+        if kind == "decode" and not is_enc:
+            rt_caches = S.cache_structs(cfg, runtime, gbs, seq)
+            full = rt_caches.get(pname)
+            if full:
+                cache_slice = _sliced_struct(full)
+                full_shard = S.cache_shardings({pname: full}, cfg, mesh, runtime)[pname]
+                cache_shard = jax.tree_util.tree_map(
+                    lambda s: ns(P(*s.spec[1:])), full_shard
+                )
+
+        # the encoder stage's "x" is the frame sequence; it never decodes
+        xs = mem_struct if (is_enc and mem_struct is not None) else x_struct
+        xs_shard = mem_shard if (is_enc and mem_struct is not None) else x_shard
+        if is_enc:
+            xs = jax.ShapeDtypeStruct((xs.shape[0], xs.shape[1], cfg.d_model), jnp.bfloat16)
+        decode_body = kind == "decode" and not is_enc
+        pos = (jnp.zeros((1, 1), jnp.int32) if decode_body
+               else jnp.arange(xs.shape[1], dtype=jnp.int32)[None, :])
+        mem_for_stage = None if is_enc else mem_struct
+        mem_shard_for_stage = None if is_enc else mem_shard
+
+        if kind == "train":
+            def fn(p1, x, mem, bc):
+                body = lambda pp, xx: stage_body(
+                    pp, None, xx, stage, cfg, runtime, positions=pos, memory=mem
+                )[:2]
+                (y, aux), vjp = jax.vjp(body, p1, x)
+                gp, gx = vjp((jnp.ones_like(y), jnp.ones_like(aux)))
+                return y, gp, gx
+        else:
+            def fn(p1, x, mem, bc):
+                y, aux, nc = stage_body(
+                    p1, bc, x, stage, cfg, runtime, positions=pos, memory=mem,
+                    index=jnp.zeros((), jnp.int32),
+                )
+                return y, nc
+
+        args = (p_slice, xs, mem_for_stage, cache_slice)
+        shards = (p_shard, xs_shard, mem_shard_for_stage, cache_shard)
+        jitted = jax.jit(fn, in_shardings=shards)
+        with mesh:
+            compiled = jitted.lower(*args).compile()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        out.append(
+            dict(
+                stage=pname,
+                repeat=stage.repeat,
+                flops=float(cost.get("flops", 0.0)),
+                bytes=float(cost.get("bytes accessed", 0.0)),
+                coll=float(coll["total"]),
+            )
+        )
+    return out
+
+
+def effective_config(arch: str, *, remat=None, attn_shard=None, microbatches=None,
+                     seq_shard=None):
+    import dataclasses
+
+    cfg = get_config(arch)
+    overrides = {}
+    if remat is not None:
+        overrides["remat_policy"] = remat
+    if attn_shard is not None:
+        overrides["attn_shard"] = attn_shard
+    if microbatches is not None:
+        overrides["microbatches"] = microbatches
+    if seq_shard is not None:
+        overrides["seq_shard_activations"] = seq_shard
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, *, remat=None, attn_shard=None,
+                    microbatches=None, seq_shard=None, cfg=None,
+                    serve_dtype="bf16", decode_params="auto"):
+    """Returns (jitted_fn, args tuple of ShapeDtypeStructs)."""
+    if cfg is None:
+        cfg = effective_config(arch, remat=remat, attn_shard=attn_shard,
+                               microbatches=microbatches, seq_shard=seq_shard)
+    seq, gbs, kind = SHAPES[shape_name]
+    runtime = S.make_runtime(cfg, mesh)
+    batch, batch_shard = S.batch_specs(cfg, shape_name, mesh, runtime)
+
+    if kind == "train":
+        from repro.train.optimizer import for_config
+        from repro.train.step import make_train_step
+
+        params = S.param_structs(cfg, jnp.float32)
+        opt = for_config(cfg)
+        opt_state = jax.eval_shape(opt.init, params)
+        p_shard = tree_shardings(params, mesh, pure_dp=cfg.pure_dp)
+        o_shard = tree_shardings(opt_state, mesh, pure_dp=cfg.pure_dp)
+        step = make_train_step(cfg, runtime, opt)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, batch_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params, opt_state, batch)
+
+    p_dtype = jnp.float8_e4m3fn if serve_dtype == "f8" else jnp.bfloat16
+    p_bytes = 1 if serve_dtype == "f8" else 2
+    params = S.param_structs(cfg, p_dtype)
+    if kind == "prefill":
+        from repro.serve.step import make_prefill_step
+
+        p_shard = tree_shardings(params, mesh, pure_dp=cfg.pure_dp)
+        step = make_prefill_step(cfg, runtime)
+        fn = jax.jit(step, in_shardings=(p_shard, batch_shard))
+        return fn, (params, batch)
+
+    # decode: prefer model-only param sharding (no per-layer data-axis
+    # all-gathers) whenever the weights + KV shard fit the 16 GB HBM
+    from repro.serve.step import make_decode_step
+
+    chips = mesh.devices.size
+    model_n = 1 if cfg.pure_dp else mesh.shape.get("model", 1)
+    fits_model_only = (
+        p_bytes * cfg.total_params() / max(model_n, 1)
+        + cfg.kv_bytes_per_seq(seq) * gbs / chips
+    ) < 14e9
+    use_model_only = decode_params == "model_only" or (
+        decode_params == "auto" and fits_model_only and not cfg.pure_dp
+    )
+    p_shard = tree_shardings(params, mesh, pure_dp=cfg.pure_dp, model_only=use_model_only)
+    caches = S.cache_structs(cfg, runtime, gbs, seq)
+    c_shard = S.cache_shardings(caches, cfg, mesh, runtime)
+    step = make_decode_step(cfg, runtime)
+    fn = jax.jit(
+        step,
+        in_shardings=(p_shard, batch_shard, c_shard),
+        out_shardings=(None, None, c_shard),
+        donate_argnums=(2,),
+    )
+    return fn, (params, batch, caches)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, verbose=True,
+             serve_dtype="bf16", decode_params="auto", **overrides) -> dict:
+    cfg = effective_config(arch, **overrides)
+    ok, why = cell_is_runnable(cfg, shape_name)
+    row = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        row["status"] = why
+        return row
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi_pod"))
+    chips = mesh.devices.size
+    seq, gbs, kind = SHAPES[shape_name]
+    t0 = time.time()
+    try:
+        # roofline metrics are taken at microbatches=1 (nested scans hide flops
+        # from XLA's cost analysis); production-microbatch memory is compiled
+        # separately below.
+        import dataclasses as _dc
+
+        cfg_mb1 = _dc.replace(cfg, microbatches=1) if kind == "train" else cfg
+        fn, args = build_lowerable(arch, shape_name, mesh, cfg=cfg_mb1,
+                                   serve_dtype=serve_dtype, decode_params=decode_params)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        coll_dev = float(coll["total"])
+
+        # ---- loop-trip-count correction (see stage_body_metrics) ----
+        runtime = S.make_runtime(cfg, mesh)
+        model_n = 1 if cfg.pure_dp else mesh.shape.get("model", 1)
+        p_bytes = 1 if serve_dtype == "f8" else 2
+        body_model_only = kind == "decode" and (
+            decode_params == "model_only"
+            or (decode_params == "auto" and not cfg.pure_dp and (
+                p_bytes * cfg.total_params() / max(model_n, 1)
+                + cfg.kv_bytes_per_seq(seq) * gbs / chips) < 14e9)
+        )
+        bodies = stage_body_metrics(cfg, shape_name, mesh, runtime,
+                                    serve_dtype=serve_dtype, model_only=body_model_only)
+        for b in bodies:
+            flops_dev += (b["repeat"] - 1) * b["flops"]
+            bytes_dev += (b["repeat"] - 1) * b["bytes"]
+            coll_dev += (b["repeat"] - 1) * b["coll"]
+        coll["total"] = coll_dev
+
+        # production-microbatch memory analysis (what actually fits per chip)
+        mem_production = None
+        if kind == "train" and cfg.microbatches > 1:
+            fn2, args2 = build_lowerable(arch, shape_name, mesh, cfg=cfg)
+            with mesh:
+                mem_production = fn2.lower(*args2).compile().memory_analysis()
+        mf = model_flops(cfg, shape_name)
+        from repro.launch.traffic import min_traffic_bytes
+
+        traffic_dev = min_traffic_bytes(
+            cfg, shape_name, dict(mesh.shape),
+            serve_bytes=1.0 if serve_dtype == "f8" else 2.0,
+            decode_model_only=body_model_only,
+        )
+        compute_s = flops_dev / PEAK_FLOPS
+        memory_s = traffic_dev / HBM_BW  # analytic min-traffic (see traffic.py)
+        coll_s = coll_dev / LINK_BW
+        dominant = max(
+            ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+            key=lambda kv: kv[1],
+        )[0]
+
+        def mem_dict(m):
+            return {
+                k: getattr(m, k)
+                for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                          "output_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(m, k)
+            }
+
+        row.update(
+            status="ok",
+            chips=chips,
+            global_batch=gbs,
+            seq=seq,
+            kind=kind,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            hlo_flops_per_device=flops_dev,
+            hlo_bytes_per_device=bytes_dev,  # XLA-CPU upper bound (unfused)
+            traffic_bytes_per_device=traffic_dev,  # analytic min-traffic model
+            hlo_flops_total=flops_dev * chips,
+            hlo_bytes_total=bytes_dev * chips,
+            collective_bytes_per_device=coll_dev,
+            collective_bytes_total=coll_dev * chips,
+            collective_breakdown={k: v for k, v in coll.items() if k != "total"},
+            stage_bodies=bodies,
+            compute_term_s=compute_s,
+            memory_term_s=memory_s,
+            collective_term_s=coll_s,
+            dominant=dominant,
+            model_flops=mf,
+            model_flops_ratio=(mf / (flops_dev * chips)) if flops_dev else None,
+            params_bytes=2.0 * cfg.total_params() if kind != "train" else 4.0 * cfg.total_params(),
+            kv_bytes_per_seq=cfg.kv_bytes_per_seq(seq),
+            memory_analysis=mem_dict(mem),
+            memory_analysis_production_mb=mem_dict(mem_production) if mem_production else None,
+            microbatches_production=cfg.microbatches,
+        )
+        if verbose:
+            ma = row["memory_analysis"]
+            print(
+                f"[ok] {arch} {shape_name} {mesh_kind}: lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+                f"flops/dev {flops_dev:.3e} bytes/dev {bytes_dev:.3e} coll/dev {coll['total']:.3e} | "
+                f"terms c={compute_s*1e3:.2f}ms m={memory_s*1e3:.2f}ms x={coll_s*1e3:.2f}ms -> {dominant} | "
+                f"mem args {ma.get('argument_size_in_bytes', 0)/1e9:.2f}GB temp {ma.get('temp_size_in_bytes', 0)/1e9:.2f}GB"
+            )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug to record
+        row["status"] = f"FAIL: {type(e).__name__}: {e}"
+        row["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[FAIL] {arch} {shape_name} {mesh_kind}: {type(e).__name__}: {str(e)[:400]}")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single_pod", choices=["single_pod", "multi_pod", "both"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--attn-shard", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--seq-shard", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--serve-dtype", default="bf16", choices=["bf16", "f8"])
+    ap.add_argument("--decode-params", default="auto", choices=["auto", "2d", "model_only"])
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single_pod", "multi_pod"] if args.mesh == "both" else [args.mesh]
+
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                row = run_cell(
+                    arch, shape, mesh_kind,
+                    remat=args.remat, attn_shard=args.attn_shard,
+                    microbatches=args.microbatches,
+                    seq_shard=None if args.seq_shard is None else args.seq_shard == "on",
+                    serve_dtype=args.serve_dtype, decode_params=args.decode_params,
+                )
+                rows.append(row)
+                if args.out:
+                    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+                    Path(args.out).write_text(json.dumps(rows, indent=1))
+    n_ok = sum(1 for r in rows if r.get("status") == "ok")
+    n_skip = sum(1 for r in rows if str(r.get("status", "")).startswith("SKIP"))
+    n_fail = len(rows) - n_ok - n_skip
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skip, {n_fail} fail / {len(rows)} cells")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,35 @@
+"""Production meshes (a FUNCTION, not a module-level constant — importing this
+module never touches jax device state).
+
+single-pod: (16, 16) ("data", "model")      = 256 chips (one TPU v5e pod)
+multi-pod : (2, 16, 16) ("pod", "data", "model") = 512 chips (2 pods)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_smoke_mesh(data: int = 2, model: int = 2):
+    """Tiny mesh for subprocess sharding tests (8 fake devices)."""
+    import numpy as np
+
+    n = data * model
+    devices = jax.devices()[:n]
+    return jax.sharding.Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))

@@ -1,0 +1,53 @@
+"""Serving launcher: CRMS fleet plan + a local engine demo.
+
+``python -m repro.launch.serve --plan`` prints the CRMS allocation for the
+ten-architecture fleet on a 256-chip pod. ``--demo`` additionally runs a
+reduced-config engine end-to-end on CPU.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--plan", action="store_true")
+    ap.add_argument("--demo", action="store_true")
+    ap.add_argument("--chips", type=int, default=256)
+    args = ap.parse_args()
+
+    if args.plan or not args.demo:
+        from repro.serve.fleet import FleetManager
+
+        fm = FleetManager(n_chips=args.chips)
+        alloc, groups = fm.plan()
+        print(f"fleet utility: {alloc.utility:.3f} feasible={alloc.feasible} stable={alloc.stable}")
+        print(f"{'arch':28s} {'N':>3s} {'chips':>7s} {'HBM GB':>8s} {'Ws ms':>8s}")
+        for i, app in enumerate(fm.apps):
+            print(
+                f"{app.name:28s} {alloc.n[i]:3d} {alloc.r_cpu[i]:7.1f} "
+                f"{alloc.r_mem[i]:8.1f} {alloc.ws[i]*1e3:8.1f}"
+            )
+        print(f"replica groups: {len(groups)}; chips used {alloc.total_cpu():.0f}/{args.chips}")
+
+    if args.demo:
+        from repro.configs import get_config
+        from repro.models.layers import Runtime
+        from repro.models.model import init_params
+        from repro.serve.engine import Engine, Request
+
+        cfg = get_config("gemma-2b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, Runtime(mesh=None, compute_dtype=jnp.float32),
+                     slots=2, max_len=64)
+        for rid in range(4):
+            eng.submit(Request(rid=rid, prompt=np.arange(1, 9, dtype=np.int32), max_new=8))
+        done = eng.run()
+        for r in done:
+            print(f"req {r.rid}: {r.out}")
+
+
+if __name__ == "__main__":
+    main()

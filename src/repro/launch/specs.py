@@ -1,0 +1,125 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch × shape × mesh)
+cell — the dry-run lowers against these (weak-type-correct, shardable, zero
+allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig
+from repro.models.layers import Runtime
+from repro.models.model import init_cache, init_params
+from repro.sharding.rules import batch_spec, data_axes, tree_shardings
+
+
+def make_runtime(cfg: ModelConfig, mesh: Mesh | None, compute_dtype=jnp.bfloat16,
+                 attn_backend: str = "reference") -> Runtime:
+    axes = data_axes(mesh) if mesh is not None else ("data",)
+    model_axis = "model"
+    if cfg.pure_dp and mesh is not None and "model" in mesh.shape:
+        axes = axes + ("model",)
+        model_axis = None
+    return Runtime(mesh=mesh, data_axes=axes, model_axis=model_axis,
+                   compute_dtype=compute_dtype, attn_backend=attn_backend,
+                   seq_shard_acts=cfg.seq_shard_activations and model_axis is not None)
+
+
+def _maybe(axes, dim: int, mesh: Mesh):
+    """Shard dim over the longest prefix of axes that divides it evenly."""
+    for k in range(len(axes), 0, -1):
+        sub = tuple(axes[:k])
+        n = 1
+        for a in sub:
+            n *= mesh.shape[a]
+        if n > 1 and dim % n == 0 and dim >= n:
+            return sub
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh, runtime: Runtime | None = None):
+    """(batch ShapeDtypeStructs, batch shardings) for a cell."""
+    seq, gbs, kind = SHAPES[shape_name]
+    axes = runtime.data_axes if runtime is not None else data_axes(mesh)
+    bsp = _maybe(axes, gbs, mesh)
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    if kind == "train":
+        batch = {
+            "tokens": _sds((gbs, seq), jnp.int32),
+            "labels": _sds((gbs, seq), jnp.int32),
+        }
+        shard = {
+            "tokens": ns(P(bsp, None)),
+            "labels": ns(P(bsp, None)),
+        }
+    elif kind == "prefill":
+        batch = {"tokens": _sds((gbs, seq), jnp.int32)}
+        shard = {"tokens": ns(P(bsp, None))}
+    else:  # decode
+        batch = {
+            "tokens": _sds((gbs, 1), jnp.int32),
+            "index": _sds((), jnp.int32),
+        }
+        shard = {
+            "tokens": ns(P(bsp, None)),
+            "index": ns(P()),
+        }
+
+    if cfg.family == "vlm":
+        batch["patches"] = _sds((gbs, cfg.n_patches, cfg.d_vision), jnp.bfloat16)
+        shard["patches"] = ns(P(bsp, None, None))
+    if cfg.family == "audio":
+        frames = max(seq // cfg.enc_frames_ratio, 8)
+        if kind == "decode":
+            # serving memoizes the encoder output at admission; decode steps
+            # consume the precomputed memory (DESIGN.md / §Perf iteration)
+            batch["memory"] = _sds((gbs, frames, cfg.d_model), jnp.bfloat16)
+            shard["memory"] = ns(P(bsp, None, None))
+        else:
+            batch["frames"] = _sds((gbs, frames, cfg.d_model), jnp.bfloat16)
+            shard["frames"] = ns(P(bsp, None, None))
+    return batch, shard
+
+
+def param_structs(cfg: ModelConfig, param_dtype=jnp.float32):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0), param_dtype))
+
+
+def cache_structs(cfg: ModelConfig, runtime: Runtime, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, runtime, batch, max_len, dtype))
+
+
+def cache_shardings(cache_struct, cfg: ModelConfig, mesh: Mesh, runtime: Runtime | None = None):
+    """KV layout (R, B, KV, T, hd): batch over data axes (when divisible), T
+    over 'model' (flash-decode seq sharding — DESIGN.md §5)."""
+    axes = runtime.data_axes if runtime is not None else data_axes(mesh)
+    model_n = 1 if (runtime is not None and "model" in axes) else mesh.shape["model"]
+
+    mdl = "model" if model_n > 1 else None
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shp = leaf.shape
+        if name in ("k", "v"):
+            bsp = _maybe(axes, shp[1], mesh)
+            tsp = mdl if (mdl and shp[3] % model_n == 0) else None
+            return NamedSharding(mesh, P(None, bsp, None, tsp, None))
+        if name == "conv":
+            bsp = _maybe(axes, shp[1], mesh)
+            csp = mdl if (mdl and shp[3] % model_n == 0) else None
+            return NamedSharding(mesh, P(None, bsp, None, csp))
+        if name == "ssm":
+            bsp = _maybe(axes, shp[1], mesh)
+            hsp = mdl if (mdl and shp[2] % model_n == 0) else None
+            return NamedSharding(mesh, P(None, bsp, hsp, None, None))
+        return NamedSharding(mesh, P())  # index etc.
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_struct)

@@ -1,0 +1,54 @@
+"""Training launcher: ``python -m repro.launch.train --arch gemma-2b --steps 50
+--reduced`` runs a real training loop (reduced config on CPU; full config on a
+real TPU slice with the production mesh). Checkpoints + automatic restart.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.specs import make_runtime
+from repro.models.layers import Runtime
+from repro.train.loop import Trainer, TrainerConfig, run_with_recovery
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true", help="tiny same-family config (CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    if args.production_mesh:
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh()
+        runtime = make_runtime(cfg, mesh, compute_dtype=jnp.bfloat16)
+    else:
+        runtime = Runtime(mesh=None, data_axes=("data",), compute_dtype=jnp.float32)
+
+    tcfg = TrainerConfig(
+        seq_len=args.seq_len, global_batch=args.global_batch, steps=args.steps,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir, lr=args.lr,
+    )
+    history, restarts = run_with_recovery(
+        lambda: Trainer(cfg, tcfg, runtime), total_steps=args.steps
+    )
+    for h in history:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} gnorm {h['grad_norm']:.3f} {h['dt']*1e3:.0f}ms")
+    print(f"done: {len(history)} logs, {restarts} restarts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model substrate: pure-JAX composable layers for all assigned architectures.
+
+Everything is functional: `init_*` builds nested-dict param trees (explicitly
+dtyped — see dtype discipline note in repro/core/__init__.py), `apply_*` are
+pure functions. Stacked-layer params carry a leading scan axis.
+"""

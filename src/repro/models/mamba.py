@@ -1,0 +1,193 @@
+"""Mamba2 (state-space duality) mixer layer.
+
+Chunked SSD algorithm (Dao & Gu 2024): within chunks of length Q the output is
+an attention-like masked product C·(decay ⊙ B)ᵀ·X; across chunks a small state
+(heads, head_dim, d_state) is carried by a linear recurrence (lax.scan over
+chunks). Decode uses the O(1) recurrent form with a conv ring buffer.
+
+The intra-chunk kernel is the hot spot — `repro.kernels.ssd` is the Pallas TPU
+version; `_ssd_chunk_ref` below (used by default on CPU) is its oracle with
+identical FLOP structure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MambaSpec, ModelConfig
+from repro.models.layers import Runtime, constrain
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.mamba or MambaSpec()
+    d = cfg.d_model
+    d_in = m.d_inner(d)
+    nh = m.n_heads(d)
+    N = m.d_state
+    conv_ch = d_in + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d**-0.5
+    return {
+        # order: [z (d_in), x (d_in), B (N), C (N), dt (nh)]
+        "w_in": (jax.random.normal(k1, (d, 2 * d_in + 2 * N + nh), jnp.float32) * s).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (m.d_conv, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "a_log": jnp.zeros((nh,), dtype=jnp.float32),
+        "d_skip": jnp.ones((nh,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((nh,), dtype=jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype=dtype),
+        "w_out": (jax.random.normal(k4, (d_in, d), jnp.float32) * d_in**-0.5).astype(dtype),
+    }
+
+
+def _segsum(x):
+    """log-decay lower-triangular matrix: L[i,j] = sum_{j<k<=i} x[k] (i>=j)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunks_ref(xh, bmat, cmat, da, chunk: int):
+    """Chunked SSD scan (reference).
+
+    xh: (B, S, H, P) dt-weighted inputs; bmat/cmat: (B, S, N); da: (B, S, H)
+    decay increments dt*A (<=0). Returns (B, S, H, P) and final state
+    (B, H, P, N).
+    """
+    Bb, S, H, Pd = xh.shape
+    N = bmat.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    xc = xh.reshape(Bb, nc, Q, H, Pd)
+    bc = bmat.reshape(Bb, nc, Q, N)
+    cc = cmat.reshape(Bb, nc, Q, N)
+    dac = da.reshape(Bb, nc, Q, H)
+
+    # intra-chunk (dual/attention form)
+    L = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))  # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bnqs,bnts->bnqt", cc, bc, preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum(
+        "bnqt,bnhqt,bnthp->bnqhp", scores, L, xc, preferred_element_type=jnp.float32
+    )
+
+    # chunk states: S_n = sum_t decay_to_end[t] * B[t] x[t]
+    da_cum = jnp.cumsum(dac, axis=2)  # (B, nc, Q, H)
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # (B, nc, Q, H)
+    states = jnp.einsum(
+        "bnts,bnth,bnthp->bnhps", bc, decay_to_end, xc, preferred_element_type=jnp.float32
+    )  # (B, nc, H, P, N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])  # (B, nc, H)
+
+    def step(carry, inp):
+        s_prev = carry  # (B, H, P, N)
+        s_new, dec = inp  # (B, H, P, N), (B, H)
+        s_out = s_prev  # state entering this chunk
+        carry_new = s_new + dec[..., None, None] * s_prev
+        return carry_new, s_out
+
+    s0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+    final_state, s_in = jax.lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_in = s_in.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    # inter-chunk contribution: y_off[t] = C[t] · decay_in[t] · S_in
+    decay_in = jnp.exp(da_cum)  # (B, nc, Q, H)
+    y_off = jnp.einsum(
+        "bnts,bnth,bnhps->bnthp", cc, decay_in, s_in, preferred_element_type=jnp.float32
+    )
+    y = (y_diag + y_off).reshape(Bb, S, H, Pd)
+    return y, final_state
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, S, Ch); w: (K, Ch). state: (B, K-1, Ch)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, Ch)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1) :, :]
+    return out, new_state
+
+
+def apply_mamba(
+    p,
+    x,
+    cfg: ModelConfig,
+    runtime: Runtime,
+    *,
+    cache=None,  # dict(conv=(B,K-1,Ch), ssm=(B,H,P,N)) for decode
+    chunk: int = 256,
+):
+    """Returns (y (B,S,d), new_cache or None)."""
+    m = cfg.mamba or MambaSpec()
+    d = cfg.d_model
+    d_in = m.d_inner(d)
+    nh = m.n_heads(d)
+    N = m.d_state
+    Pd = m.head_dim
+    dt_c = runtime.compute_dtype
+    B, S, _ = x.shape
+    mdl = runtime.model_axis
+    batch_sp = runtime.data_axes
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt_c))
+    z, xin, bmat, cmat, dt_raw = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv_w"].astype(dt_c), p["conv_b"].astype(dt_c),
+        state=None if cache is None else cache["conv"],
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xin, bmat, cmat = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["a_log"])  # (H,) negative
+    da = dt * A  # (B,S,H)
+
+    xh = xin.reshape(B, S, nh, Pd).astype(jnp.float32) * dt[..., None]
+    if nh % max(runtime.model_axis_size, 1) == 0:
+        xh = constrain(xh, runtime, P(batch_sp, None, mdl, None))
+
+    if cache is None or S > 1:
+        y, final_state = _ssd_chunks_ref(xh, bmat.astype(jnp.float32), cmat.astype(jnp.float32), da, chunk)
+        new_cache = None
+        if cache is not None:  # prefill-fill: stash the running state for decode
+            new_cache = {"conv": conv_state.astype(cache["conv"].dtype), "ssm": final_state}
+    else:
+        # O(1) recurrent decode step (S is 1 in practice; loop if larger)
+        s_state = cache["ssm"]  # (B,H,P,N) f32
+
+        def step(s_prev, t):
+            dec = jnp.exp(da[:, t])  # (B,H)
+            upd = jnp.einsum("bhp,bn->bhpn", xh[:, t], bmat[:, t].astype(jnp.float32))
+            s_new = dec[..., None, None] * s_prev + upd
+            y_t = jnp.einsum("bhpn,bn->bhp", s_new, cmat[:, t].astype(jnp.float32))
+            return s_new, y_t
+
+        s_state, ys = jax.lax.scan(step, s_state, jnp.arange(S))
+        y = ys.transpose(1, 0, 2, 3)  # (B,S,H,P)
+        final_state = s_state
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype), "ssm": final_state}
+
+    y = y + p["d_skip"][None, None, :, None] * xin.reshape(B, S, nh, Pd).astype(jnp.float32)
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (f32) then output projection
+    gated = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(gated * gated, axis=-1, keepdims=True)
+    gated = gated * jax.lax.rsqrt(ms + 1e-6) * p["norm_w"].astype(jnp.float32)
+    out = jnp.einsum("bse,ed->bsd", gated.astype(dt_c), p["w_out"].astype(dt_c))
+    out = constrain(out, runtime, P(batch_sp, None, None))
+    return out, new_cache

@@ -1,0 +1,293 @@
+"""Unified model: assembles any assigned architecture from its config's stage
+layout (DESIGN.md §4). One code path covers dense/MoE/hybrid/SSM/VLM/enc-dec.
+
+Entry points:
+  init_params(cfg, key, param_dtype)      -> pytree (stacked per scan stage)
+  apply_lm(params, cfg, runtime, tokens)  -> logits (train/prefill forward)
+  init_cache(cfg, runtime, batch, max_len)-> decode cache pytree
+  apply_decode(params, cfg, runtime, tokens, cache, index) -> logits, cache
+
+Layers inside a stage are python-unrolled; stages scan over their repeat count
+with jax.checkpoint(remat) applied to the body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, Stage
+from repro.models import layers as L
+from repro.models import mamba as MB
+from repro.models import moe as MOE
+from repro.models.layers import Runtime, constrain
+
+
+# ----------------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------------
+def _init_block(key, kind: str, cfg: ModelConfig, dtype):
+    p = {"norm": L.init_norm(cfg, dtype)}
+    if kind == "self_attn":
+        p["attn"] = L.init_attention(key, cfg, dtype)
+    elif kind == "cross_attn":
+        p["attn"] = L.init_attention(key, cfg, dtype, cross=True)
+    elif kind == "mlp":
+        p["mlp"] = L.init_mlp(key, cfg, dtype)
+    elif kind == "moe":
+        p["moe"] = MOE.init_moe(key, cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = MB.init_mamba(key, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_stage(key, stage: Stage, cfg: ModelConfig, dtype):
+    def init_one(k):
+        ks = jax.random.split(k, len(stage.blocks))
+        return {f"b{i}": _init_block(ks[i], kind, cfg, dtype) for i, (kind, _) in enumerate(stage.blocks)}
+
+    keys = jax.random.split(key, stage.repeat)
+    return jax.vmap(init_one)(keys)
+
+
+def init_params(cfg: ModelConfig, key, param_dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), jnp.float32)
+                  * cfg.d_model**-0.5).astype(param_dtype),
+        "final_norm": L.init_norm(cfg, param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab), jnp.float32) * cfg.d_model**-0.5
+        ).astype(param_dtype)
+    for si, stage in enumerate(cfg.stages()):
+        params[f"stage{si}"] = _init_stage(keys[2 + si], stage, cfg, param_dtype)
+    if cfg.family == "audio":
+        enc_stage = Stage(blocks=(("self_attn", {"causal": False}), ("mlp", {})), repeat=cfg.enc_layers)
+        params["encoder"] = _init_stage(keys[6], enc_stage, cfg, param_dtype)
+        params["enc_norm"] = L.init_norm(cfg, param_dtype)
+    if cfg.family == "vlm":
+        params["vision_proj"] = (
+            jax.random.normal(keys[7], (cfg.d_vision, cfg.d_model), jnp.float32)
+            * cfg.d_vision**-0.5
+        ).astype(param_dtype)
+    return params
+
+
+# ----------------------------------------------------------------------------
+# Stage application (scan + remat)
+# ----------------------------------------------------------------------------
+def _remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+
+
+def _apply_block(bp, kind, opts, x, cfg, runtime, *, positions, memory, cache, index):
+    h = L.apply_norm(bp["norm"], x, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    if kind == "self_attn":
+        y, new_cache = L.apply_attention(
+            bp["attn"], h, cfg, runtime,
+            positions=positions, causal=opts.get("causal", True), cache=cache,
+        )
+    elif kind == "cross_attn":
+        y, _ = L.apply_attention(
+            bp["attn"], h, cfg, runtime, positions=positions, causal=False,
+            memory=memory, use_rope=False,
+        )
+    elif kind == "mlp":
+        y = L.apply_mlp(bp["mlp"], h, cfg, runtime)
+    elif kind == "moe":
+        y, aux = MOE.apply_moe(bp["moe"], h, cfg, runtime, cf=cfg.moe_cf)
+    elif kind == "mamba":
+        y, new_cache = MB.apply_mamba(bp["mamba"], h, cfg, runtime, cache=cache)
+    else:
+        raise ValueError(kind)
+    return x + y, aux, new_cache
+
+
+def stage_body(bp_all, bc_all, xc, stage: Stage, cfg: ModelConfig, runtime: Runtime,
+               *, positions, memory=None, index=None):
+    """One scan iteration of a stage (also lowered standalone by the dry-run's
+    loop-trip-count roofline correction — see launch/dryrun.py)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for i, (kind, opts) in enumerate(stage.blocks):
+        bc = None if bc_all is None else bc_all.get(f"b{i}")
+        xc, aux, nc = _apply_block(
+            bp_all[f"b{i}"], kind, opts, xc, cfg, runtime,
+            positions=positions, memory=memory, cache=bc, index=index,
+        )
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_caches[f"b{i}"] = nc
+    xc = L.residual_constrain(xc, runtime)
+    return xc, aux_total, (new_caches if new_caches else None)
+
+
+def apply_stage(
+    stage_params,
+    x,
+    stage: Stage,
+    cfg: ModelConfig,
+    runtime: Runtime,
+    *,
+    positions,
+    memory=None,
+    caches=None,  # pytree with leading repeat axis, or None
+    index=None,
+):
+    """Returns (x, aux_sum, new_caches)."""
+
+    def body(carry, scanned):
+        bp_all, bc_all = scanned
+        xc, aux_total, new_caches = stage_body(
+            bp_all, bc_all, carry, stage, cfg, runtime,
+            positions=positions, memory=memory, index=index,
+        )
+        return xc, (aux_total, new_caches)
+
+    policy = _remat_policy(cfg.remat_policy)
+    if policy is not None and caches is None:
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (stage_params, caches)
+    x, (auxes, new_caches) = jax.lax.scan(body, x, xs)
+    return x, jnp.sum(auxes), new_caches
+
+
+# ----------------------------------------------------------------------------
+# Forward passes
+# ----------------------------------------------------------------------------
+def _embed(params, cfg: ModelConfig, runtime: Runtime, tokens):
+    emb = params["embed"].astype(runtime.compute_dtype)
+    x = jnp.take(emb, tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, runtime.compute_dtype)
+    return L.residual_constrain(x, runtime)
+
+
+def _head(params, cfg: ModelConfig, runtime: Runtime, x):
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(runtime.compute_dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(runtime.compute_dtype))
+    return constrain(logits, runtime, P(runtime.data_axes, None, runtime.model_axis))
+
+
+def _encode_memory(params, cfg: ModelConfig, runtime: Runtime, extra_inputs):
+    """VLM: project patch embeddings; audio: run the encoder over frames.
+    A precomputed ``memory`` (e.g. the encoder output memoized at request
+    admission — the serving path) short-circuits both."""
+    if "memory" in extra_inputs:
+        return constrain(extra_inputs["memory"].astype(runtime.compute_dtype),
+                         runtime, P(runtime.data_axes, None, None))
+    if cfg.family == "vlm":
+        patches = extra_inputs["patches"].astype(runtime.compute_dtype)  # (B, Np, d_vis)
+        mem = jnp.einsum("bpv,vd->bpd", patches, params["vision_proj"].astype(runtime.compute_dtype))
+        return constrain(mem, runtime, P(runtime.data_axes, None, None))
+    if cfg.family == "audio":
+        frames = extra_inputs["frames"].astype(runtime.compute_dtype)  # (B, F, d)
+        x = constrain(frames, runtime, P(runtime.data_axes, None, None))
+        F = x.shape[1]
+        pos = jnp.arange(F, dtype=jnp.int32)[None, :]
+        enc_stage = Stage(blocks=(("self_attn", {"causal": False}), ("mlp", {})), repeat=cfg.enc_layers)
+        x, _, _ = apply_stage(params["encoder"], x, enc_stage, cfg, runtime, positions=pos)
+        return L.apply_norm(params["enc_norm"], x, cfg)
+    return None
+
+
+def apply_lm(params, cfg: ModelConfig, runtime: Runtime, tokens, extra_inputs=None):
+    """Full forward (train / prefill): tokens (B, S) -> logits (B, S, V), aux."""
+    B, S = tokens.shape
+    x = _embed(params, cfg, runtime, tokens)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    memory = _encode_memory(params, cfg, runtime, extra_inputs or {})
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, stage in enumerate(cfg.stages()):
+        x, aux, _ = apply_stage(
+            params[f"stage{si}"], x, stage, cfg, runtime, positions=positions, memory=memory
+        )
+        aux_total = aux_total + aux
+    logits = _head(params, cfg, runtime, x)
+    return logits, aux_total
+
+
+# ----------------------------------------------------------------------------
+# Decode
+# ----------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, runtime: Runtime, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Cache pytree mirroring the stage structure (leading repeat axis)."""
+    hd = cfg.resolved_head_dim
+    caches = {}
+    m = cfg.mamba
+    for si, stage in enumerate(cfg.stages()):
+        st = {}
+        for i, (kind, _) in enumerate(stage.blocks):
+            if kind == "self_attn":
+                st[f"b{i}"] = {
+                    "k": jnp.zeros((stage.repeat, batch, cfg.kv_heads, max_len, hd), dtype),
+                    "v": jnp.zeros((stage.repeat, batch, cfg.kv_heads, max_len, hd), dtype),
+                    "index": jnp.zeros((stage.repeat,), jnp.int32),
+                }
+            elif kind == "mamba":
+                d_in = m.d_inner(cfg.d_model)
+                nh = m.n_heads(cfg.d_model)
+                st[f"b{i}"] = {
+                    "conv": jnp.zeros((stage.repeat, batch, m.d_conv - 1, d_in + 2 * m.d_state), dtype),
+                    "ssm": jnp.zeros((stage.repeat, batch, nh, m.head_dim, m.d_state), jnp.float32),
+                }
+        caches[f"stage{si}"] = st if st else None
+    return caches
+
+
+def apply_decode(params, cfg: ModelConfig, runtime: Runtime, tokens, caches, index, extra_inputs=None):
+    """One decode step. tokens (B, 1); index: scalar int32 position.
+    Returns (logits (B, 1, V), new_caches)."""
+    x = _embed(params, cfg, runtime, tokens)
+    positions = jnp.full((1, 1), index, jnp.int32)
+    memory = _encode_memory(params, cfg, runtime, extra_inputs or {})
+    new_caches = {}
+    for si, stage in enumerate(cfg.stages()):
+        st_caches = caches.get(f"stage{si}")
+        if st_caches is not None:
+            # broadcast the scalar step index into the per-layer cache index
+            st_caches = {
+                key: (
+                    {**blk, "index": jnp.full((stage.repeat,), index, jnp.int32)}
+                    if "index" in blk
+                    else blk
+                )
+                for key, blk in st_caches.items()
+            }
+        x, _, nc = apply_stage(
+            params[f"stage{si}"], x, stage, cfg, runtime,
+            positions=positions, memory=memory, caches=st_caches, index=index,
+        )
+        new_caches[f"stage{si}"] = nc
+    logits = _head(params, cfg, runtime, x)
+    return logits, new_caches
+
+
+# ----------------------------------------------------------------------------
+# Loss
+# ----------------------------------------------------------------------------
+def lm_loss(params, cfg: ModelConfig, runtime: Runtime, tokens, labels, extra_inputs=None,
+            aux_coeff: float = 0.01):
+    logits, aux = apply_lm(params, cfg, runtime, tokens, extra_inputs)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = jnp.mean(lse - gold)
+    return nll + aux_coeff * aux, {"nll": nll, "aux": aux}

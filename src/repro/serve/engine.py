@@ -1,0 +1,91 @@
+"""Batched serving engine: prefill -> iterative decode with a KV cache, plus a
+continuous-batching scheduler whose capacity (batch slots) comes from the HBM
+budget the CRMS fleet allocator assigned to this replica — the direct
+integration point of the paper's technique with the serving layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Runtime
+from repro.models.model import apply_decode, apply_lm, init_cache
+from repro.models.model import _encode_memory  # noqa: F401 (engine reuses)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Fixed-slot continuous batching over a shared KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params, runtime: Runtime | None = None,
+                 slots: int = 4, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.runtime = runtime or Runtime(mesh=None, compute_dtype=jnp.float32)
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self._decode = jax.jit(self._decode_impl)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _decode_impl(self, params, tokens, caches, index):
+        logits, new_caches = apply_decode(params, self.cfg, self.runtime, tokens, caches, index)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, new_caches
+
+    # ------------------------------------------------------------------
+    def run(self, max_steps: int = 512) -> list[Request]:
+        """Simple single-slot-group scheduler: admit up to `slots` requests of
+        equal prompt length (left-padded batching is out of scope), prefill as
+        a batch, decode until all done, repeat."""
+        finished = []
+        while self.queue and max_steps > 0:
+            group = [self.queue.popleft() for _ in range(min(self.slots, len(self.queue)))]
+            S = max(len(r.prompt) for r in group)
+            B = len(group)
+            toks = np.zeros((B, S), np.int32)
+            for i, r in enumerate(group):
+                toks[i, S - len(r.prompt):] = r.prompt  # simple left pad with 0
+            caches = init_cache(self.cfg, self.runtime, B, self.max_len,
+                                dtype=self.runtime.compute_dtype)
+            # prefill via full forward + cache fill (prefill-fill path)
+            logits, _ = apply_lm(self.params, self.cfg, self.runtime, jnp.asarray(toks))
+            # re-run through decode steps to fill caches exactly (prompt replay);
+            # production uses the prefill-fill cache path — this keeps the
+            # engine simple and exact for tests
+            cur = jnp.asarray(toks)
+            for t in range(S):
+                nxt, caches = self._decode(self.params, cur[:, t:t + 1], caches, jnp.int32(t))
+            next_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
+            for step in range(max(r.max_new for r in group)):
+                max_steps -= 1
+                for i, r in enumerate(group):
+                    if not r.done:
+                        r.out.append(int(next_tok[i]))
+                        if len(r.out) >= r.max_new:
+                            r.done = True
+                if all(r.done for r in group) or S + step + 1 >= self.max_len:
+                    break
+                nxt, caches = self._decode(
+                    self.params, jnp.asarray(next_tok)[:, None], caches, jnp.int32(S + step)
+                )
+                next_tok = np.asarray(nxt, np.int32)
+            finished += group
+        return finished

@@ -1,0 +1,68 @@
+"""CRMS-driven multi-tenant fleet scheduler — the paper's allocator operating
+a TPU pod that serves all ten assigned architectures simultaneously.
+
+Pipeline (mirrors the paper end to end):
+  1. profile: per-arch latency measurements from the dry-run roofline model
+     (core.fleet.profile_workload)
+  2. fit: Eq.(1) latency surfaces over (chips/replica, HBM/replica)
+  3. optimize: CRMS (Algorithm 1 + 2) under the pod's chip/HBM budgets
+  4. actuate: replica groups sized accordingly; each group's Engine gets its
+     batch slots from the HBM grant (serve/engine.py)
+
+Quasi-dynamic: `FleetManager.observe(lam)` feeds arrival-rate drift; the
+QuasiDynamicAllocator re-optimizes only past the threshold (§V-B).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.crms import QuasiDynamicAllocator
+from repro.core.fleet import (
+    WorkloadCost,
+    build_fleet_apps,
+    default_workloads,
+    hbm_bounds_gb,
+    pod_caps,
+)
+from repro.core.problem import Allocation
+
+
+@dataclasses.dataclass
+class ReplicaGroup:
+    arch: str
+    chips: float
+    hbm_gb: float
+    batch_slots: int
+
+
+class FleetManager:
+    def __init__(self, workloads: list[WorkloadCost] | None = None,
+                 n_chips: int = 256, alpha: float = 1.4, beta: float = 0.2,
+                 threshold: float = 0.15, seed: int = 0):
+        self.workloads = workloads or default_workloads()
+        self.caps = pod_caps(n_chips)
+        self.apps = build_fleet_apps(self.workloads, seed=seed)
+        self.allocator = QuasiDynamicAllocator(self.caps, alpha, beta, threshold)
+
+    def observe(self, lam: dict[str, float]):
+        self.apps = [a.with_lam(lam.get(a.name, a.lam)) for a in self.apps]
+
+    def plan(self) -> tuple[Allocation, list[ReplicaGroup]]:
+        alloc = self.allocator.allocate(self.apps)
+        groups = []
+        for i, (app, w) in enumerate(zip(self.apps, self.workloads)):
+            for _ in range(int(alloc.n[i])):
+                slots = max(
+                    int((alloc.r_mem[i] * 1e9 - w.params_bytes) / w.kv_bytes_per_seq), 1
+                )
+                groups.append(
+                    ReplicaGroup(
+                        arch=app.name,
+                        chips=float(alloc.r_cpu[i]),
+                        hbm_gb=float(alloc.r_mem[i]),
+                        batch_slots=slots,
+                    )
+                )
+        return alloc, groups

@@ -1,0 +1,32 @@
+"""Serving steps: prefill (forward + cache fill) and decode (one token against
+a seq_len KV cache) — these are what the decode_*/long_* dry-run cells lower.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Runtime
+from repro.models.model import apply_lm, apply_decode
+
+
+def make_prefill_step(cfg: ModelConfig, runtime: Runtime):
+    def prefill_step(params, batch):
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        logits, _ = apply_lm(params, cfg, runtime, batch["tokens"], extra)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, runtime: Runtime):
+    def decode_step(params, batch, caches):
+        extra = {k: v for k, v in batch.items() if k not in ("tokens", "index")}
+        logits, new_caches = apply_decode(
+            params, cfg, runtime, batch["tokens"], caches, batch["index"], extra
+        )
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token, logits[:, -1, :], new_caches
+
+    return decode_step

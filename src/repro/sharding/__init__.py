@@ -1,0 +1,1 @@
+from repro.sharding.rules import param_sharding, tree_shardings, batch_spec  # noqa: F401

@@ -1,0 +1,122 @@
+"""End-to-end trainer: init/restore -> jit'd step loop -> periodic async
+checkpoints, with failure recovery (resume from LATEST) and straggler-tolerant
+data fetch. Used by launch/train.py and examples/train_small_lm.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import Prefetcher, SyntheticTokens
+from repro.models.layers import Runtime
+from repro.models.model import init_params
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import Optimizer, for_config
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    seq_len: int = 256
+    global_batch: int = 8
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    lr: float = 3e-4
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig, runtime: Runtime | None = None,
+                 optimizer: Optimizer | None = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.runtime = runtime or Runtime(mesh=None, data_axes=("data",),
+                                          compute_dtype=jnp.float32)
+        self.optimizer = optimizer or for_config(cfg, lr=tcfg.lr)
+        self.step_fn = jax.jit(make_train_step(cfg, self.runtime, self.optimizer))
+        self.data = SyntheticTokens(cfg.vocab, tcfg.seq_len, tcfg.global_batch, seed=tcfg.seed)
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        self.params = init_params(self.cfg, key)
+        self.opt_state = self.optimizer.init(self.params)
+        latest = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if latest is not None:
+            _, state = ckpt.restore(
+                self.tcfg.ckpt_dir, {"params": self.params, "opt": self.opt_state}
+            )
+            self.params, self.opt_state = state["params"], state["opt"]
+            self.step = latest
+        return self.step
+
+    # ------------------------------------------------------------------
+    def run(self, steps: int | None = None, fail_at: int | None = None):
+        """Run the loop; ``fail_at`` injects a simulated crash (tests exercise
+        the restart path by constructing a fresh Trainer and resuming)."""
+        steps = steps if steps is not None else self.tcfg.steps
+        pre = Prefetcher(self.data, start_step=self.step)
+        pending_ckpt = None
+        try:
+            while self.step < steps:
+                got = pre.next(timeout=10.0, skip_slow=True)
+                if got is None:  # straggler: skip this fetch, keep the step going
+                    continue
+                _, batch = got
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                t0 = time.time()
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch
+                )
+                self.step += 1
+                if fail_at is not None and self.step >= fail_at:
+                    raise RuntimeError(f"injected failure at step {self.step}")
+                if self.step % self.tcfg.log_every == 0 or self.step == steps:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = self.step
+                    m["dt"] = time.time() - t0
+                    self.history.append(m)
+                if self.step % self.tcfg.ckpt_every == 0 or self.step == steps:
+                    if pending_ckpt is not None:
+                        pending_ckpt.join()
+                    pending_ckpt = ckpt.save(
+                        self.tcfg.ckpt_dir, self.step,
+                        {"params": self.params, "opt": self.opt_state},
+                        blocking=False,
+                    )
+        finally:
+            pre.close()
+            if pending_ckpt is not None:
+                pending_ckpt.join()
+        return self.history
+
+
+def run_with_recovery(make_trainer, total_steps: int, max_restarts: int = 3,
+                      fail_at: int | None = None):
+    """Launcher-level fault tolerance: on failure, rebuild the trainer (fresh
+    process semantics), restore from LATEST and continue."""
+    restarts = 0
+    history = []
+    while True:
+        tr = make_trainer()
+        tr.init_or_restore()
+        try:
+            history += tr.run(steps=total_steps, fail_at=fail_at)
+            return history, restarts
+        except RuntimeError:
+            restarts += 1
+            fail_at = None  # only fail once in tests
+            if restarts > max_restarts:
+                raise

@@ -1,0 +1,115 @@
+"""Optimizers in pure JAX: AdamW and Adafactor (factored second moments for
+the ≥100B archs where AdamW state would blow the 16 GB/chip HBM budget —
+jamba-398b trains with Adafactor; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+    name: str = "opt"
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mh = m_new / c1
+            vh = v_new / c2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return p_new, m_new, v_new
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, {"m": m_new, "v": v_new, "step": step}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              weight_decay: float = 0.0, clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern 2018), no first moment."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+    def init(params):
+        def per(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"s": jax.tree.map(per, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, eps))[..., None]
+                u = g / jnp.sqrt(jnp.maximum(r * vc[..., None, :], eps))
+                s_new = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(jnp.maximum(v, eps))
+                s_new = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            p_new = p.astype(jnp.float32) - lr * u
+            if weight_decay:
+                p_new = p_new - lr * weight_decay * p.astype(jnp.float32)
+            return p_new.astype(p.dtype), s_new
+
+        # grads is a structure-prefix of state["s"] (each param leaf maps to a
+        # {v}/{vr,vc} dict), so tree.map passes the per-param state dict whole.
+        out = jax.tree.map(upd, grads, state["s"], params)
+        # out leaves are (p_new, s_new) tuples at param positions
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        s_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, {"s": s_new, "step": step}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def for_config(cfg, lr: float = 3e-4) -> Optimizer:
+    """AdamW below 200B total params; Adafactor above (HBM budget)."""
+    if cfg.total_params() > 2e11:
+        return adafactor(lr=lr)
+    return adamw(lr=lr)

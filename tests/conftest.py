@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on the default single CPU device; multi-device sharding tests
+# spawn subprocesses with their own XLA_FLAGS (see test_sharding.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

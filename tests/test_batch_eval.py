@@ -1,0 +1,33 @@
+"""Vectorized candidate evaluation vs the scalar utility (and the kernel ref)."""
+import numpy as np
+
+from repro.core.batch_eval import evaluate_candidates
+from repro.core.problem import ServerCaps, utility
+from repro.core.profiler import make_paper_apps
+
+CAPS = ServerCaps(30.0, 10.0)
+APPS = make_paper_apps(lam=(8, 7, 10, 15), fitted=False)
+
+
+def test_batch_matches_scalar():
+    rng = np.random.default_rng(0)
+    B = 64
+    n = rng.integers(3, 10, (B, 4)).astype(float)
+    c = rng.uniform(0.5, 3.0, (B, 4))
+    m = np.stack([rng.uniform(a.r_min, a.r_max, B) for a in APPS], axis=1)
+    u, ws, feas = evaluate_candidates(APPS, CAPS, n, c, m, 1.4, 0.2, hard=True)
+    for i in range(0, B, 7):
+        u_ref, ws_ref, _ = utility(APPS, n[i], c[i], m[i], CAPS, 1.4, 0.2)
+        if np.isfinite(u[i]):
+            assert np.allclose(u[i], float(u_ref), rtol=1e-8)
+            assert np.allclose(ws[i], np.asarray(ws_ref), rtol=1e-8)
+
+
+def test_soft_mode_finite_everywhere():
+    rng = np.random.default_rng(1)
+    B = 128
+    n = rng.integers(1, 4, (B, 4)).astype(float)  # mostly unstable
+    c = rng.uniform(0.1, 0.6, (B, 4))
+    m = np.stack([rng.uniform(a.r_min, a.r_max, B) for a in APPS], axis=1)
+    u, _, _ = evaluate_candidates(APPS, CAPS, n, c, m, 1.4, 0.2, hard=False)
+    assert np.all(np.isfinite(u))

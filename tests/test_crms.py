@@ -1,0 +1,76 @@
+"""CRMS (Algorithms 1+2) invariants and comparative performance."""
+import numpy as np
+import pytest
+
+from repro.core.crms import QuasiDynamicAllocator, algorithm1, crms
+from repro.core.problem import ServerCaps, service_rate
+from repro.core.profiler import make_paper_apps
+
+CAPS = ServerCaps(r_cpu=30.0, r_mem=10.0)
+APPS = make_paper_apps(lam=(8, 7, 10, 15), fitted=False)
+
+
+def test_algorithm1_ideal_configs():
+    ideal = algorithm1(APPS, CAPS, 1.4, 0.2)
+    for app, ic in zip(APPS, ideal):
+        assert ic.r_mem == pytest.approx(app.r_max)
+        assert ic.n >= 1
+        assert app.lam < ic.n * ic.mu  # stable at the ideal config
+
+
+def test_crms_feasible_stable_constrained():
+    alloc = crms(APPS, CAPS, 1.4, 0.2)
+    assert alloc.feasible and alloc.stable
+    assert alloc.total_cpu() <= CAPS.r_cpu * 1.001
+    assert alloc.total_mem() <= CAPS.r_mem * 1.001
+    assert np.all(np.isfinite(alloc.ws))
+
+
+def test_crms_uses_constrained_branch():
+    """At the paper's §VI operating point the ideal demand exceeds the caps."""
+    ideal = algorithm1(APPS, CAPS, 1.4, 0.2)
+    total_cpu = sum(ic.n * ic.r_cpu for ic in ideal)
+    total_mem = sum(ic.n * ic.r_mem for ic in ideal)
+    assert total_cpu > CAPS.r_cpu or total_mem > CAPS.r_mem
+    alloc = crms(APPS, CAPS, 1.4, 0.2)
+    stages = [h["stage"] for h in alloc.meta["history"]]
+    assert "p1_initial" in stages
+
+
+def test_crms_beats_random_search():
+    from repro.core.baselines import random_search
+
+    alloc = crms(APPS, CAPS, 1.4, 0.2)
+    rs = random_search(APPS, CAPS, 1.4, 0.2, n_samples=8000, seed=1)
+    if rs.feasible and rs.stable:
+        assert alloc.utility <= rs.utility + 1e-9
+
+
+def test_crms_sufficient_resources_branch():
+    big = ServerCaps(r_cpu=120.0, r_mem=40.0)
+    alloc = crms(APPS, big, 1.4, 0.2)
+    assert alloc.feasible and alloc.stable
+    # with ample resources every app keeps its saturation memory
+    for app, m in zip(APPS, alloc.r_mem):
+        assert m == pytest.approx(app.r_max, rel=0.05)
+
+
+def test_quasi_dynamic_reoptimizes_only_on_drift():
+    qd = QuasiDynamicAllocator(CAPS, 1.4, 0.2, threshold=0.15)
+    qd.allocate(APPS)
+    assert qd.reoptimizations == 1
+    # small drift: no re-optimization
+    apps_small = [a.with_lam(a.lam * 1.05) for a in APPS]
+    qd.allocate(apps_small)
+    assert qd.reoptimizations == 1
+    # large drift: re-optimize
+    apps_big = [a.with_lam(a.lam * 1.5) for a in APPS]
+    qd.allocate(apps_big)
+    assert qd.reoptimizations == 2
+
+
+def test_crms_respects_stability_under_load_growth():
+    heavy = make_paper_apps(lam=(10, 9, 12, 18), fitted=False)
+    alloc = crms(heavy, ServerCaps(34.0, 11.0), 1.4, 0.2)
+    for app, n, c, m in zip(heavy, alloc.n, alloc.r_cpu, alloc.r_mem):
+        assert app.lam < n * float(service_rate(app, c, m))

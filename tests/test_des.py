@@ -1,0 +1,53 @@
+"""Discrete-event simulator vs analytic Erlang-C (validates Eq. 7)."""
+import numpy as np
+import pytest
+
+from repro.core.des import WorkloadPhase, run_quasi_dynamic, simulate_allocation, simulate_mmn
+from repro.core.queueing import erlang_ws_np
+
+
+@pytest.mark.parametrize(
+    "lam,mu,n",
+    [(8.0, 1.8, 6), (15.0, 3.3, 7), (2.0, 5.0, 1), (4.0, 1.0, 6)],
+)
+def test_des_matches_analytic(lam, mu, n):
+    s = simulate_mmn(lam, mu, n, horizon_s=4000.0, warmup_s=400.0, seed=7)
+    w = erlang_ws_np(n, lam, mu)
+    assert s.mean_response_s == pytest.approx(w, rel=0.08)
+
+
+def test_des_utilization():
+    s = simulate_mmn(4.0, 2.0, 4, horizon_s=3000.0, seed=1)
+    assert s.utilization == pytest.approx(4.0 / (2.0 * 4), rel=0.1)
+
+
+def test_simulate_allocation_end_to_end():
+    from repro.core.crms import crms
+    from repro.core.problem import ServerCaps
+    from repro.core.profiler import make_paper_apps
+
+    apps = make_paper_apps(lam=(8, 7, 10, 15), fitted=False)
+    caps = ServerCaps(30.0, 10.0)
+    alloc = crms(apps, caps, 1.4, 0.2)
+    stats = simulate_allocation(apps, alloc, horizon_s=1500.0, seed=3)
+    for st, ws in zip(stats, alloc.ws):
+        assert st.mean_response_s == pytest.approx(ws, rel=0.2)
+
+
+def test_quasi_dynamic_driver():
+    from repro.core.crms import QuasiDynamicAllocator
+    from repro.core.problem import ServerCaps
+    from repro.core.profiler import make_paper_apps
+
+    apps = make_paper_apps(fitted=False)
+    qd = QuasiDynamicAllocator(ServerCaps(34.0, 11.0), 1.4, 0.2)
+    phases = [
+        WorkloadPhase(0.0, (6, 6, 6, 6)),
+        WorkloadPhase(500.0, (6.2, 6.1, 5.9, 6.0)),  # small drift: reuse
+        WorkloadPhase(1000.0, (9, 8, 11, 13)),  # big drift: re-optimize
+    ]
+    results = run_quasi_dynamic(apps, phases, qd.allocate, phase_len=300.0, seed=0)
+    assert len(results) == 3
+    assert qd.reoptimizations == 2
+    for r in results:
+        assert all(np.isfinite(r["mean_response"]))

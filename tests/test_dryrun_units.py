@@ -1,0 +1,111 @@
+"""Dry-run machinery unit tests that don't need 512 devices: HLO collective
+parser, model-flops accounting, traffic model, config cell table."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+      %ar = f32[1024,16]{1,0} all-reduce(%x), replica_groups={}
+      %ag.1 = bf16[512]{0} all-gather(%y), dimensions={0}
+      %rs = (f32[256]{0}, f32[256]{0}) reduce-scatter(%a, %b), dimensions={0}
+      %a2a = s8[128,64]{1,0} all-to-all(%c)
+      %cp-start = bf16[32]{0} collective-permute-start(%d)
+      %dot = f32[999]{0} dot(%e, %f)
+    """
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 1024 * 16 * 4
+    assert out["all-gather"] == 512 * 2
+    assert out["reduce-scatter"] == 2 * 256 * 4
+    assert out["all-to-all"] == 128 * 64
+    assert out["collective-permute"] == 32 * 2
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_model_flops_kinds():
+    from repro.launch.dryrun import model_flops
+
+    cfg = get_config("gemma-2b")
+    n = cfg.active_params()
+    assert model_flops(cfg, "train_4k") == pytest.approx(6.0 * n * 4096 * 256)
+    assert model_flops(cfg, "prefill_32k") == pytest.approx(2.0 * n * 32768 * 32)
+    assert model_flops(cfg, "decode_32k") == pytest.approx(2.0 * n * 128)
+
+
+def test_moe_model_flops_use_active_params():
+    from repro.launch.dryrun import model_flops
+
+    cfg = get_config("moonshot-v1-16b-a3b")
+    assert cfg.active_params() < 0.2 * cfg.total_params()
+    assert model_flops(cfg, "train_4k") == pytest.approx(
+        6.0 * cfg.active_params() * 4096 * 256
+    )
+
+
+def test_traffic_model_sanity():
+    from repro.launch.traffic import min_traffic_bytes
+
+    mesh = {"data": 16, "model": 16}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = cell_is_runnable(cfg, shape)
+            if not ok:
+                continue
+            t = min_traffic_bytes(cfg, shape, mesh)
+            assert t > 0, (arch, shape)
+    # decode traffic is dominated by streaming the (used) weights
+    cfg = get_config("codeqwen1.5-7b")
+    t = min_traffic_bytes(cfg, "decode_32k", mesh)
+    assert t >= 2.0 * cfg.total_params()
+
+
+def test_cell_skip_table():
+    skips = {
+        arch: cell_is_runnable(get_config(arch), "long_500k")[0] for arch in ARCH_IDS
+    }
+    assert skips["mamba2-130m"] and skips["jamba-1.5-large-398b"]
+    assert not skips["codeqwen1.5-7b"]
+    assert not skips["llama-3.2-vision-90b"]
+    # all other shapes run everywhere
+    for arch in ARCH_IDS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_is_runnable(get_config(arch), shape)[0]
+
+
+def test_configs_match_assignment_table():
+    dims = {
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "mamba2-130m": (24, 768, 24, 0, 0, 50280),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    }
+    for arch, (L, d, H, KV, dff, V) in dims.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.d_ff, cfg.vocab) == (
+            L, d, H, KV, dff, V,
+        ), arch
+    assert get_config("llama4-scout-17b-a16e").moe.n_experts == 16
+    assert get_config("llama4-scout-17b-a16e").moe.top_k == 1
+    assert get_config("moonshot-v1-16b-a3b").moe.top_k == 6
+    assert get_config("jamba-1.5-large-398b").moe.top_k == 2
+    assert get_config("jamba-1.5-large-398b").attn_every == 8
+    assert get_config("mamba2-130m").mamba.d_state == 128
+    assert get_config("gemma-2b").resolved_head_dim == 256
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"] == (4096, 256, "train")
+    assert SHAPES["prefill_32k"] == (32768, 32, "prefill")
+    assert SHAPES["decode_32k"] == (32768, 128, "decode")
+    assert SHAPES["long_500k"] == (524288, 1, "decode")

@@ -1,0 +1,118 @@
+"""TPU-fleet binding + serving engine + optimizer units + dtype discipline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_fleet_latency_model_shape():
+    from repro.core.fleet import default_workloads, hbm_bounds_gb, request_latency_ms
+
+    for w in default_workloads():
+        r_min, r_max = hbm_bounds_gb(w)
+        assert r_max > r_min > 0
+        chips = np.array([1, 2, 4, 8, 16, 32], float)
+        d = request_latency_ms(w, chips, r_max)
+        assert np.all(np.diff(d) < 1e-9), w.name  # more chips -> faster
+        mems = np.linspace(r_min, r_max, 6)
+        d2 = request_latency_ms(w, 8.0, mems)
+        assert np.all(np.diff(d2) < 1e-9), w.name  # more HBM -> faster
+
+
+def test_fleet_eq1_fit_quality():
+    from repro.core.fleet import build_fleet_apps, default_workloads
+
+    apps = build_fleet_apps(default_workloads()[:3], seed=0)
+    for a in apps:
+        assert all(k > 0 for k in a.kappa), a.name
+        assert a.r_max > a.r_min
+
+
+@pytest.mark.slow
+def test_fleet_manager_plan_within_pod():
+    from repro.serve.fleet import FleetManager
+
+    fm = FleetManager(n_chips=256)
+    alloc, groups = fm.plan()
+    assert alloc.total_cpu() <= 256 * 1.001
+    assert alloc.total_mem() <= 256 * 16.0 * 1.001
+    assert len(groups) == int(np.sum(alloc.n))
+    assert all(g.batch_slots >= 1 for g in groups)
+
+
+def test_engine_generates_greedy_tokens():
+    from repro.configs import get_config
+    from repro.models.layers import Runtime
+    from repro.models.model import init_params
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_config("gemma-2b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, Runtime(mesh=None, compute_dtype=jnp.float32),
+                 slots=2, max_len=48)
+    prompts = [np.arange(1, 9, dtype=np.int32), np.arange(3, 11, dtype=np.int32)]
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new=6))
+    done = eng.run()
+    assert len(done) == 2
+    for r in done:
+        assert len(r.out) == 6
+        assert all(0 <= t < cfg.vocab for t in r.out)
+
+
+def test_adamw_and_adafactor_minimize_quadratic():
+    from repro.train.optimizer import adafactor, adamw
+
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(16, 16)), jnp.float32)
+    for opt in (adamw(lr=0.05, weight_decay=0.0), adafactor(lr=0.5)):
+        params = {"w": jnp.zeros((16, 16), jnp.float32)}
+        state = opt.init(params)
+        loss = lambda p: jnp.mean((p["w"] - target) ** 2)
+        l0 = float(loss(params))
+        g_fn = jax.grad(loss)
+        for _ in range(60):
+            params, state = opt.update(g_fn(params), state, params)
+        assert float(loss(params)) < 0.1 * l0, opt.name
+
+
+def test_optimizer_for_config_selection():
+    from repro.configs import get_config
+    from repro.train.optimizer import for_config
+
+    assert for_config(get_config("jamba-1.5-large-398b")).name == "adafactor"
+    assert for_config(get_config("gemma-2b")).name == "adamw"
+
+
+def test_dtype_discipline():
+    """No f64 leaks into model params despite x64 being enabled for CRMS."""
+    from repro.configs import registry
+    from repro.models.model import init_params
+
+    for arch in ("gemma-2b", "mamba2-130m", "jamba-1.5-large-398b"):
+        cfg = registry()[arch].reduced()
+        params = jax.eval_shape(lambda c=cfg: init_params(c, jax.random.PRNGKey(0), jnp.bfloat16))
+        for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+            assert leaf.dtype in (jnp.bfloat16, jnp.float32, jnp.int32), (arch, path, leaf.dtype)
+
+
+def test_compress_allreduce_shapes():
+    """int8 error-feedback compression: quantize/dequant identity within scale."""
+    import jax
+
+    from repro.train.step import compress_allreduce_pod
+
+    if jax.device_count() < 2:
+        # single-device: exercise only quantization math via a 1-pod mesh
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1), ("pod",))
+    else:
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:2]).reshape(2), ("pod",))
+    grads = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)}
+    err = jax.tree.map(jnp.zeros_like, grads)
+    with mesh:
+        red, new_err = compress_allreduce_pod(grads, mesh, err)
+    scale = float(jnp.max(jnp.abs(grads["w"]))) / 127.0
+    np.testing.assert_allclose(np.asarray(red["w"]), np.asarray(grads["w"]), atol=scale)
+    # error feedback carries the residual
+    np.testing.assert_allclose(
+        np.asarray(new_err["w"]), np.asarray(grads["w"] - red["w"]), atol=1e-6
+    )

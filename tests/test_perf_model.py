@@ -1,0 +1,77 @@
+"""Eq.(1) fitting pipeline (paper §III): recovery, family comparison (Table I
+ordering), surface-shape properties, sensitivity orderings."""
+import numpy as np
+import pytest
+
+from repro.core.perf_model import (
+    FAMILIES,
+    cpu_sensitivity,
+    eq1_latency,
+    fit_best_family,
+    fit_family,
+    mem_sensitivity,
+    validate_eq1_shape,
+)
+from repro.core.profiler import PAPER_APPS_TRUE, profile_all, profile_app
+
+
+def test_fit_recovers_ground_truth():
+    p = profile_app("ResNet_v2", seed=0, noise_rel=0.01)
+    fr = fit_family("eq1", p.cpu, p.mem, p.latency_ms, n_starts=8)
+    assert fr.r2 > 0.995
+    k_true = np.asarray(p.true_kappa)
+    assert np.allclose(fr.params, k_true, rtol=0.15)
+
+
+def test_eq1_wins_table1():
+    """Table I: Eq.(1) has the lowest RMSE among the five families on real
+    (noisy, Eq.1-shaped) profiling data."""
+    p = profile_app("MobileNet_v2", seed=1)
+    fits = fit_best_family(p.cpu, p.mem, p.latency_ms, n_starts=8)
+    rmses = {k: v.rmse for k, v in fits.items()}
+    assert min(rmses, key=rmses.get) == "eq1", rmses
+    assert fits["eq1"].r2 > 0.99
+
+
+def test_surface_shape_theorem2_preconditions():
+    for name, spec in PAPER_APPS_TRUE.items():
+        checks = validate_eq1_shape(np.asarray(spec["kappa"]))
+        assert all(checks.values()), (name, checks)
+
+
+def test_cpu_sensitivity_ordering():
+    """Paper §III-C: SE_ResNeXt > ResNet_v2 > MobileNet_v2 > SSD at c=1."""
+    sens = {
+        name: float(cpu_sensitivity(np.asarray(spec["kappa"]), 1.0, spec["r_max"]))
+        for name, spec in PAPER_APPS_TRUE.items()
+    }
+    order = sorted(sens, key=sens.get, reverse=True)
+    assert order == ["SE_ResNeXt", "ResNet_v2", "MobileNet_v2", "SSD_MobileNet_v1"], sens
+
+
+def test_mem_sensitivity_resnet_family_high():
+    """ResNet/SE most sensitive to memory reductions near r_min (§III-C)."""
+    sens = {
+        name: float(mem_sensitivity(np.asarray(spec["kappa"]), 4.0, spec["r_min"]))
+        for name, spec in PAPER_APPS_TRUE.items()
+    }
+    assert sens["SE_ResNeXt"] > sens["MobileNet_v2"]
+    assert sens["ResNet_v2"] > sens["SSD_MobileNet_v1"]
+
+
+def test_fitted_apps_close_to_truth():
+    from repro.core.profiler import make_paper_apps
+
+    apps_fit = make_paper_apps(fitted=True, seed=3)
+    apps_true = make_paper_apps(fitted=False)
+    for f, t in zip(apps_fit, apps_true):
+        d_f = float(eq1_latency(np.asarray(f.kappa), 1.5, t.r_max))
+        d_t = float(eq1_latency(np.asarray(t.kappa), 1.5, t.r_max))
+        assert d_f == pytest.approx(d_t, rel=0.08), f.name
+
+
+def test_all_families_converge():
+    p = profile_app("SSD_MobileNet_v1", seed=2)
+    fits = fit_best_family(p.cpu, p.mem, p.latency_ms, n_starts=6)
+    for name, fr in fits.items():
+        assert np.isfinite(fr.rmse), name

@@ -1,0 +1,82 @@
+"""M/M/N queueing formulas (paper Eqs. 4-7): numpy oracle agreement +
+hypothesis properties (stability, monotonicity, convexity in N)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import queueing
+
+
+@given(
+    n=st.integers(1, 64),
+    lam=st.floats(0.1, 50.0),
+    mu=st.floats(0.1, 20.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_matches_numpy_oracle(n, lam, mu):
+    ws = float(queueing.erlang_ws(n, lam, mu))
+    ref = queueing.erlang_ws_np(n, lam, mu)
+    if math.isinf(ref):
+        assert math.isinf(ws)
+    else:
+        assert ws == pytest.approx(ref, rel=1e-8)
+
+
+def test_mm1_closed_form():
+    # M/M/1: W = 1/(mu - lam)
+    for lam, mu in [(1.0, 3.0), (5.0, 9.0), (0.5, 0.6)]:
+        assert float(queueing.erlang_ws(1, lam, mu)) == pytest.approx(
+            1.0 / (mu - lam), rel=1e-9
+        )
+
+
+@given(lam=st.floats(0.5, 20.0), mu=st.floats(0.2, 10.0), n=st.integers(1, 40))
+@settings(max_examples=100, deadline=None)
+def test_ws_at_least_service_time(lam, mu, n):
+    ws = float(queueing.erlang_ws(n, lam, mu))
+    if math.isfinite(ws):
+        assert ws >= 1.0 / mu - 1e-9
+
+
+@given(lam=st.floats(0.5, 10.0), mu=st.floats(0.5, 5.0))
+@settings(max_examples=50, deadline=None)
+def test_monotone_decreasing_in_n(lam, mu):
+    lo = queueing.stability_lower_bound(lam, mu)
+    vals = [float(queueing.erlang_ws(n, lam, mu)) for n in range(lo, lo + 8)]
+    assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+@given(lam=st.floats(0.5, 10.0), mu=st.floats(0.5, 5.0))
+@settings(max_examples=50, deadline=None)
+def test_convex_in_n(lam, mu):
+    """Dyer-Proll convexity (basis of Theorem 3)."""
+    lo = queueing.stability_lower_bound(lam, mu)
+    vals = [float(queueing.erlang_ws(n, lam, mu)) for n in range(lo, lo + 10)]
+    for a, b, c in zip(vals, vals[1:], vals[2:]):
+        assert a + c - 2 * b >= -1e-9
+
+
+def test_unstable_is_inf():
+    assert math.isinf(float(queueing.erlang_ws(2, 10.0, 4.0)))
+    assert math.isinf(float(queueing.erlang_ws(1, 1.0, 1.0)))
+
+
+def test_stability_lower_bound():
+    assert queueing.stability_lower_bound(10.0, 4.0) == 3
+    assert queueing.stability_lower_bound(8.0, 4.0) == 3  # exact ratio bumps
+    assert queueing.stability_lower_bound(0.5, 4.0) == 1
+
+
+def test_pi0_is_probability():
+    for n, lam, mu in [(3, 2.0, 1.0), (10, 5.0, 1.0), (1, 0.2, 1.0)]:
+        p = float(queueing.erlang_pi0(n, lam, mu))
+        assert 0.0 < p <= 1.0
+
+
+def test_differentiable_in_mu():
+    import jax
+
+    g = jax.grad(lambda mu: queueing.erlang_ws(4, 3.0, mu))(2.0)
+    assert np.isfinite(float(g)) and float(g) < 0  # faster service -> lower Ws

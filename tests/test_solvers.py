@@ -1,0 +1,72 @@
+"""SP1/SP2/P1 solver correctness: grid-search oracles + scipy cross-checks."""
+import numpy as np
+import pytest
+
+from repro.core.problem import ServerCaps, service_rate
+from repro.core.profiler import make_paper_apps
+from repro.core.solvers import (
+    p1_solve,
+    p1_solve_scipy,
+    sp1_objective,
+    sp1_solve,
+    sp2_exhaustive,
+    sp2_ternary,
+)
+
+CAPS = ServerCaps(r_cpu=30.0, r_mem=10.0)
+APPS = make_paper_apps(lam=(8, 7, 10, 15), fitted=False)
+
+
+def test_sp1_matches_grid_search():
+    for app in APPS:
+        c_star, m_star = sp1_solve(app, CAPS, 1.4, 0.2)
+        assert m_star == pytest.approx(app.r_max)
+        grid = np.linspace(app.cpu_min, app.cpu_max, 20001)
+        vals = np.asarray(sp1_objective(app, CAPS, 1.4, 0.2, grid, m_star))
+        c_grid = float(grid[int(np.argmin(vals))])
+        assert c_star == pytest.approx(c_grid, abs=2e-3), app.name
+
+
+def test_sp2_ternary_equals_exhaustive():
+    for app in APPS:
+        c_star, m_star = sp1_solve(app, CAPS, 1.4, 0.2)
+        mu = float(service_rate(app, c_star, m_star))
+        n_t = sp2_ternary(app, CAPS, 1.4, 0.2, mu, c_star, m_star)
+        n_e = sp2_exhaustive(app, CAPS, 1.4, 0.2, mu, c_star, m_star)
+        assert n_t == n_e, app.name
+
+
+def test_p1_feasible_and_matches_scipy():
+    n = [6, 7, 3, 7]
+    res = p1_solve(APPS, CAPS, n, 1.4, 0.2)
+    assert res.converged
+    assert float(np.sum(np.asarray(n) * res.r_cpu)) <= CAPS.r_cpu * 1.001
+    assert float(np.sum(np.asarray(n) * res.r_mem)) <= CAPS.r_mem * 1.001
+    for app, m in zip(APPS, res.r_mem):
+        assert app.r_min - 1e-6 <= m <= app.r_max + 1e-6
+
+    res_sp = p1_solve_scipy(APPS, CAPS, n, 1.4, 0.2)
+    assert res_sp.converged
+    # interior point should match (or beat) SLSQP within tolerance
+    assert res.utility <= res_sp.utility * 1.01 + 1e-6
+
+
+def test_p1_stability_maintained():
+    n = [6, 7, 3, 7]
+    res = p1_solve(APPS, CAPS, n, 1.4, 0.2)
+    for app, nn, c, m in zip(APPS, n, res.r_cpu, res.r_mem):
+        mu = float(service_rate(app, c, m))
+        assert app.lam < nn * mu, app.name
+
+
+def test_p1_infeasible_instance_flagged():
+    tiny = ServerCaps(r_cpu=1.0, r_mem=0.5)
+    res = p1_solve(APPS, tiny, [6, 7, 3, 7], 1.4, 0.2)
+    assert not res.converged
+
+
+def test_p1_better_with_more_resources():
+    n = [6, 7, 3, 7]
+    u_small = p1_solve(APPS, ServerCaps(28.0, 9.0), n, 1.4, 0.2).utility
+    u_big = p1_solve(APPS, ServerCaps(38.0, 11.0), n, 1.4, 0.2).utility
+    assert u_big <= u_small + 1e-9

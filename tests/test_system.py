@@ -1,0 +1,33 @@
+"""End-to-end behaviour tests for the paper's system: profile -> fit -> CRMS
+-> deploy -> simulate, on the paper's own §VI scenario."""
+import numpy as np
+import pytest
+
+from repro.core.crms import crms
+from repro.core.des import simulate_allocation
+from repro.core.problem import ServerCaps
+from repro.core.profiler import make_paper_apps
+
+
+@pytest.mark.slow
+def test_full_paper_pipeline():
+    """The complete measurement-driven loop the paper describes, end to end:
+    noisy profiling -> Eq.(1) NLLS fit -> CRMS under the §VI budgets -> the
+    resulting allocation is feasible, stable, and its *simulated* response
+    times agree with the analytic model it optimized."""
+    apps = make_paper_apps(lam=(8, 7, 10, 15), xbar=(5, 5, 5, 5), fitted=True, seed=11)
+    caps = ServerCaps(r_cpu=30.0, r_mem=10.0)
+    alloc = crms(apps, caps, alpha=1.4, beta=0.2)
+
+    assert alloc.feasible and alloc.stable
+    assert alloc.total_cpu() <= caps.r_cpu * 1.001
+    assert alloc.total_mem() <= caps.r_mem * 1.001
+
+    stats = simulate_allocation(apps, alloc, horizon_s=1200.0, seed=5)
+    for app, st, ws in zip(apps, stats, alloc.ws):
+        assert st.mean_response_s == pytest.approx(ws, rel=0.25), app.name
+
+    # fitted-model allocation should be near the oracle (true-κ) allocation
+    apps_true = make_paper_apps(lam=(8, 7, 10, 15), fitted=False)
+    alloc_true = crms(apps_true, caps, 1.4, 0.2)
+    assert alloc.utility == pytest.approx(alloc_true.utility, rel=0.1)

@@ -1,0 +1,105 @@
+"""Numerical verification of the paper's Theorems 1-4 (under the k1>0 sign
+convention — see DESIGN.md §3)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.problem import App, ServerCaps
+from repro.core.profiler import make_paper_apps
+from repro.core.solvers import _p1_objective, _pack_apps, phi, sp1_objective, sp1_solve
+
+
+CAPS = ServerCaps(r_cpu=30.0, r_mem=10.0)
+
+
+def test_theorem2_convexity_and_monotonicity():
+    """F_i strictly convex in (c, m); monotone decreasing in m."""
+    apps = make_paper_apps(fitted=False)
+    for app in apps:
+        f = lambda c, m: sp1_objective(app, CAPS, 1.4, 0.2, c, m)
+        for c in np.linspace(0.3, 5.0, 7):
+            for m in np.linspace(app.r_min, app.r_max, 5):
+                h_cc = float(jax.grad(jax.grad(f, 0), 0)(c, m))
+                h_mm = float(jax.grad(jax.grad(f, 1), 1)(c, m))
+                h_cm = float(jax.grad(jax.grad(f, 0), 1)(c, m))
+                g_m = float(jax.grad(f, 1)(c, m))
+                assert h_cc > 0, (app.name, c, m)
+                assert h_mm > 0
+                assert h_cm == pytest.approx(0.0, abs=1e-10)  # Eq. (22)
+                assert g_m < 0  # optimal memory = r_max
+
+
+def test_theorem3_phi_convex_in_n():
+    apps = make_paper_apps(fitted=False)
+    app = apps[0]
+    c_star, m_star = sp1_solve(app, CAPS, 1.4, 0.2)
+    from repro.core.problem import service_rate
+
+    mu = float(service_rate(app, c_star, m_star))
+    lo = int(np.ceil(app.lam / mu)) + 1
+    vals = [float(phi(app, CAPS, 1.4, 0.2, n, mu, c_star)) for n in range(lo, lo + 12)]
+    for a, b, c in zip(vals, vals[1:], vals[2:]):
+        assert a + c - 2 * b >= -1e-9
+
+
+def test_theorem4_p1_convex_along_segments():
+    """P1 objective convex over (c, m) with N fixed: check midpoint convexity
+    along random feasible segments."""
+    apps = make_paper_apps(fitted=False)
+    packed = _pack_apps(apps)
+    # generous container counts keep a usable slice of the stable region —
+    # the sharp near-floor memory curves make random segments mostly unstable
+    n = jnp.asarray([8.0, 9.0, 4.0, 9.0])
+    rng = np.random.default_rng(0)
+    f = lambda x: float(
+        _p1_objective(jnp.asarray(x), packed, n, CAPS.r_cpu, CAPS.r_mem,
+                      CAPS.power.span, 1.4, 0.2)
+    )
+    M = len(apps)
+    checked = 0
+    for _ in range(200):
+        c1 = rng.uniform(1.2, 4.0, M)
+        c2 = rng.uniform(1.2, 4.0, M)
+        m1 = np.array([rng.uniform(0.6 * a.r_min + 0.4 * a.r_max, a.r_max) for a in apps])
+        m2 = np.array([rng.uniform(0.6 * a.r_min + 0.4 * a.r_max, a.r_max) for a in apps])
+        x1, x2 = np.concatenate([c1, m1]), np.concatenate([c2, m2])
+        fx1, fx2, fmid = f(x1), f(x2), f(0.5 * (x1 + x2))
+        if not (np.isfinite(fx1) and np.isfinite(fx2) and np.isfinite(fmid)):
+            continue  # segment crosses the instability boundary
+        assert fmid <= 0.5 * (fx1 + fx2) + 1e-6
+        checked += 1
+    assert checked > 20
+
+
+def test_theorem1_np_hardness_reduction():
+    """The paper's special case (alpha=0, linear power) IS an unbounded
+    2-D knapsack: brute-force both sides of the reduction and compare."""
+    # items: (value, cpu weight, mem weight)
+    items = [(6.0, 2.0, 1.0), (5.0, 1.0, 2.0), (3.0, 1.0, 1.0)]
+    C_cpu, C_mem = 5.0, 5.0
+
+    best_knap, best_cnt = -1.0, None
+    rng = range(0, 6)
+    for ks in itertools.product(rng, repeat=3):
+        w1 = sum(k * it[1] for k, it in zip(ks, items))
+        w2 = sum(k * it[2] for k, it in zip(ks, items))
+        if w1 <= C_cpu and w2 <= C_mem:
+            v = sum(k * it[0] for k, it in zip(ks, items))
+            if v > best_knap:
+                best_knap, best_cnt = v, ks
+
+    # Problem-P special case: minimize sum c_i N_i / lam_i with c_i/lam_i = -v_i
+    best_p, best_p_cnt = np.inf, None
+    for ks in itertools.product(rng, repeat=3):
+        w1 = sum(k * it[1] for k, it in zip(ks, items))
+        w2 = sum(k * it[2] for k, it in zip(ks, items))
+        if w1 <= C_cpu and w2 <= C_mem:
+            obj = sum(k * (-it[0]) for k, it in zip(ks, items))
+            if obj < best_p:
+                best_p, best_p_cnt = obj, ks
+
+    assert best_p_cnt == best_cnt
+    assert best_p == pytest.approx(-best_knap)
