@@ -15,6 +15,7 @@ def main() -> None:
         fleet_tpu,
         mmn_validation,
         roofline_report,
+        solver_throughput,
         table1_fitting,
     )
 
@@ -27,6 +28,7 @@ def main() -> None:
         fig11_14_constrained,
         fig15_22_sweeps,
         mmn_validation,
+        solver_throughput,
         fleet_tpu,
         roofline_report,
     ):

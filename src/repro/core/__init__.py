@@ -19,4 +19,5 @@ from repro.core.perf_model import (  # noqa: E402,F401
 )
 from repro.core.queueing import erlang_ws, erlang_ls, erlang_pi0  # noqa: E402,F401
 from repro.core.problem import App, ServerCaps, Allocation, utility  # noqa: E402,F401
+from repro.core.engine import PackedApps, p1_solve_batch  # noqa: E402,F401
 from repro.core.crms import algorithm1, crms  # noqa: E402,F401

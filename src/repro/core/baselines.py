@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core import queueing
 from repro.core.batch_eval import evaluate_candidates
+from repro.core.engine import _eq1_np, as_packed
 from repro.core.problem import App, ServerCaps, Allocation, evaluate, service_rate
 from repro.core.solvers import phi, sp1_solve, sp2_bounds
 
@@ -77,15 +78,10 @@ def _n_from_delta(apps, delta, c, m):
     quotas (c, m) the container count is N = (stability floor) + Δ, Δ ≥ 0.
     Sampling N directly makes the stable region measure-zero under tight
     budgets; every practical tuner encodes the queue constraint this way."""
-    import jax.numpy as jnp
-
-    from repro.core.perf_model import eq1_latency
-
-    kappa = np.asarray([a.kappa for a in apps])
-    d_ms = np.asarray(eq1_latency((kappa[:, 0], kappa[:, 1], kappa[:, 2]), jnp.asarray(c), jnp.asarray(m)))
-    mu = 1000.0 / (np.asarray([a.xbar for a in apps]) * d_ms)
-    lam = np.asarray([a.lam for a in apps])
-    n_min = np.floor(lam / mu) + 1.0
+    packed = as_packed(apps)
+    d_ms = _eq1_np(packed.kappa, np.asarray(c, dtype=float), np.asarray(m, dtype=float))
+    mu = 1000.0 / (packed.xbar * d_ms)
+    n_min = np.floor(packed.lam / mu) + 1.0
     return n_min + np.round(np.asarray(delta))
 
 
@@ -104,8 +100,9 @@ def random_search(
     apps, caps: ServerCaps, alpha, beta, n_samples: int = 20000, seed: int = 0
 ) -> Allocation:
     rng = np.random.default_rng(seed)
+    packed = as_packed(apps)
     n, c, m = _sample_box(apps, caps, rng, n_samples)
-    u, _, _ = evaluate_candidates(apps, caps, n, c, m, alpha, beta, hard=True)
+    u, _, _ = evaluate_candidates(packed, caps, n, c, m, alpha, beta, hard=True)
     best = int(np.argmin(u))
     if not np.isfinite(u[best]):
         # all infeasible — fall back to minimal configs
@@ -161,13 +158,14 @@ def gpbo(
     uses the soft-penalty utility so the GP sees a smooth landscape."""
     rng = np.random.default_rng(seed)
     M = len(apps)
-    lo = np.concatenate([np.zeros(M), np.full(M, 0.1), np.array([a.r_min for a in apps])])
-    hi = np.concatenate([np.full(M, 8.0), np.full(M, 3.0), np.array([a.r_max for a in apps])])
+    packed = as_packed(apps)
+    lo = np.concatenate([np.zeros(M), np.full(M, 0.1), packed.r_min])
+    hi = np.concatenate([np.full(M, 8.0), np.full(M, 3.0), packed.r_max])
 
     def eval_soft(X):  # X: (B, 3M) in (Δ, c, m) space — see _n_from_delta
         delta, c, m = X[:, :M], X[:, M : 2 * M], X[:, 2 * M :]
-        n = _n_from_delta(apps, delta, c, m)
-        u, _, _ = evaluate_candidates(apps, caps, n, c, m, alpha, beta, hard=False)
+        n = _n_from_delta(packed, delta, c, m)
+        u, _, _ = evaluate_candidates(packed, caps, n, c, m, alpha, beta, hard=False)
         return u
 
     X = rng.uniform(lo, hi, size=(n_init, 3 * M))
@@ -209,8 +207,8 @@ def gpbo(
 
     # report the best *hard-feasible* evaluated point
     c_all, m_all = X[:, M : 2 * M], X[:, 2 * M :]
-    n_all = _n_from_delta(apps, X[:, :M], c_all, m_all)
-    u_hard, _, _ = evaluate_candidates(apps, caps, n_all, c_all, m_all, alpha, beta, hard=True)
+    n_all = _n_from_delta(packed, X[:, :M], c_all, m_all)
+    u_hard, _, _ = evaluate_candidates(packed, caps, n_all, c_all, m_all, alpha, beta, hard=True)
     if np.all(~np.isfinite(u_hard)):
         i = int(np.argmin(y))
         n_i, c_i, m_i = _repair(apps, caps, n_all[i], c_all[i], m_all[i])
@@ -234,13 +232,14 @@ def tpebo(
 ) -> Allocation:
     rng = np.random.default_rng(seed)
     M = len(apps)
-    lo = np.concatenate([np.zeros(M), np.full(M, 0.1), np.array([a.r_min for a in apps])])
-    hi = np.concatenate([np.full(M, 8.0), np.full(M, 3.0), np.array([a.r_max for a in apps])])
+    packed = as_packed(apps)
+    lo = np.concatenate([np.zeros(M), np.full(M, 0.1), packed.r_min])
+    hi = np.concatenate([np.full(M, 8.0), np.full(M, 3.0), packed.r_max])
 
     def eval_soft(X):
         delta, c, m = X[:, :M], X[:, M : 2 * M], X[:, 2 * M :]
-        n = _n_from_delta(apps, delta, c, m)
-        u, _, _ = evaluate_candidates(apps, caps, n, c, m, alpha, beta, hard=False)
+        n = _n_from_delta(packed, delta, c, m)
+        u, _, _ = evaluate_candidates(packed, caps, n, c, m, alpha, beta, hard=False)
         return u
 
     X = rng.uniform(lo, hi, size=(n_init, 3 * M))
@@ -272,8 +271,8 @@ def tpebo(
         y = np.concatenate([y, eval_soft(x_next[None])])
 
     c_all, m_all = X[:, M : 2 * M], X[:, 2 * M :]
-    n_all = _n_from_delta(apps, X[:, :M], c_all, m_all)
-    u_hard, _, _ = evaluate_candidates(apps, caps, n_all, c_all, m_all, alpha, beta, hard=True)
+    n_all = _n_from_delta(packed, X[:, :M], c_all, m_all)
+    u_hard, _, _ = evaluate_candidates(packed, caps, n_all, c_all, m_all, alpha, beta, hard=True)
     if np.all(~np.isfinite(u_hard)):
         i = int(np.argmin(y))
         n_i, c_i, m_i = _repair(apps, caps, n_all[i], c_all[i], m_all[i])

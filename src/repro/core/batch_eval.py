@@ -18,18 +18,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import queueing
+from repro.core.engine import as_packed
 from repro.core.perf_model import eq1_latency
 from repro.core.problem import App, ServerCaps
 
 
 def pack_apps(apps: Sequence[App]) -> dict:
-    return dict(
-        kappa=jnp.asarray([a.kappa for a in apps], jnp.float64),
-        lam=jnp.asarray([a.lam for a in apps], jnp.float64),
-        xbar=jnp.asarray([a.xbar for a in apps], jnp.float64),
-        r_min=jnp.asarray([a.r_min for a in apps], jnp.float64),
-        r_max=jnp.asarray([a.r_max for a in apps], jnp.float64),
-    )
+    """The shared engine packing (kept as the module's historical entry point)."""
+    return as_packed(apps).as_dict()
 
 
 @partial(jax.jit, static_argnames=("hard",))
@@ -80,8 +76,9 @@ def utility_batch(
 
 
 def evaluate_candidates(apps, caps: ServerCaps, n, c, m, alpha, beta, hard=True):
-    """NumPy-friendly wrapper."""
-    packed = pack_apps(apps)
+    """NumPy-friendly wrapper. ``apps`` may be a Sequence[App] or an
+    already-built engine.PackedApps (pack once, evaluate many)."""
+    packed = as_packed(apps).as_dict()
     u, ws, feas = utility_batch(
         packed,
         jnp.asarray(np.asarray(n, dtype=float)),

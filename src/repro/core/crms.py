@@ -2,15 +2,18 @@
 
 ``algorithm1``  : Efficient Server Resource Management in Sufficient Resource
                   Condition (paper Algorithm 1): per-app SP1 convex solve +
-                  SP2 integer ternary search -> ideal configs c_i*.
+                  SP2 integer argmin -> ideal configs c_i*, vmapped over apps
+                  by the batched engine.
 ``crms``        : Algorithm 2: if the ideal demand violates the global budgets,
                   fix N* and solve convex P1; then greedy refinement that
-                  repeatedly tries decrementing each app's N by one and
-                  re-solving P1, accepting the best improving move.
+                  builds ALL 2M neighbor moves (N_i ± 1) per iteration and
+                  evaluates them in ONE batched interior-point solve
+                  (engine.p1_solve_batch), accepting the best improving move.
 ``QuasiDynamicAllocator`` : the §V-B "quasi-dynamic" driver — re-optimizes only
-                  when monitored arrival rates drift past a threshold.
+                  when monitored arrival rates drift past a threshold, and
+                  warm-starts Algorithm 2 from the cached previous solution.
 
-Robustness extension beyond the paper (documented in DESIGN.md): if P1 is
+Robustness extension beyond the paper (documented in DESIGN.md §8): if P1 is
 infeasible at N* (the paper implicitly assumes it is not), we pre-trim N
 greedily by largest resource footprint until a feasible interior point exists.
 """
@@ -22,8 +25,9 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import queueing
+from repro.core.batch_eval import evaluate_candidates
+from repro.core.engine import as_packed, ideal_configs_batch, p1_solve_batch
 from repro.core.problem import Allocation, App, ServerCaps, evaluate, service_rate
-from repro.core.solvers import p1_solve, sp1_solve, sp2_ternary
 
 
 @dataclasses.dataclass
@@ -35,14 +39,15 @@ class IdealConfig:
 
 
 def algorithm1(apps: Sequence[App], caps: ServerCaps, alpha: float, beta: float):
-    """Paper Algorithm 1 — per-app ideal configs under sufficient resources."""
-    out = []
-    for app in apps:
-        c_star, m_star = sp1_solve(app, caps, alpha, beta)
-        mu_star = float(service_rate(app, c_star, m_star))
-        n_star = sp2_ternary(app, caps, alpha, beta, mu_star, c_star, m_star)
-        out.append(IdealConfig(r_cpu=c_star, r_mem=m_star, n=n_star, mu=mu_star))
-    return out
+    """Paper Algorithm 1 — per-app ideal configs under sufficient resources.
+    The SP1 bisection and SP2 argmin run vmapped over all apps at once."""
+    c_star, m_star, n_star, mu_star = ideal_configs_batch(
+        as_packed(apps), caps, alpha, beta
+    )
+    return [
+        IdealConfig(r_cpu=float(c), r_mem=float(m), n=int(n), mu=float(mu))
+        for c, m, n, mu in zip(c_star, m_star, n_star, mu_star)
+    ]
 
 
 def _stability_floor(app: App, r_cpu: float, r_mem: float) -> int:
@@ -80,57 +85,116 @@ def crms(
     alpha: float,
     beta: float,
     max_refine_iters: int = 64,
-    solver=p1_solve,
+    solver=None,
+    warm: Allocation | None = None,
+    packed=None,
 ) -> Allocation:
-    """Paper Algorithm 2 (CRMS). Returns the final feasible Allocation."""
-    ideal = algorithm1(apps, caps, alpha, beta)
-    n = np.array([ic.n for ic in ideal], dtype=int)
-    c = np.array([ic.r_cpu for ic in ideal])
-    m = np.array([ic.r_mem for ic in ideal])
-    c_hint = c.copy()
+    """Paper Algorithm 2 (CRMS). Returns the final feasible Allocation.
 
-    total_cpu = float(np.sum(n * c))
-    total_mem = float(np.sum(n * m))
-    over = total_cpu > caps.r_cpu or total_mem > caps.r_mem
+    ``solver``: optional serial P1 solver override with the `p1_solve`
+    signature; when None (default) every P1 — including all 2M refinement
+    neighbors per iteration — goes through the batched engine.
+    ``warm``: a previous Allocation for the same app mix (quasi-dynamic
+    execution). When usable, Algorithm 1 is skipped and refinement starts
+    from the cached container counts.
+    ``packed``: optional engine.PackedApps for ``apps`` built by the caller
+    (e.g. the fleet binding packs once per observation epoch).
+    """
+    packed = packed if packed is not None else as_packed(apps)
+    M = len(apps)
 
-    history = [{"stage": "algorithm1", "n": n.tolist(), "U": None}]
+    def solve_one(n_vec, c_hint):
+        if solver is not None:
+            return solver(apps, caps, n_vec, alpha, beta, c_hint=c_hint)
+        return p1_solve_batch(
+            packed, caps, np.asarray(n_vec, dtype=float)[None, :], alpha, beta,
+            c_hint=c_hint,
+        ).row(0)
 
-    if over:
-        n, ok = _pretrim_n(apps, caps, n, ideal)
-        res = solver(apps, caps, n, alpha, beta, c_hint=c_hint)
-        if not res.converged:
-            # fall back: keep trimming until P1 converges
-            for _ in range(int(np.sum(n))):
-                floors = [max(_stability_floor(a, ch, a.r_max), 1) for a, ch in zip(apps, c_hint)]
-                cand = np.argsort(-(n * np.array([a.r_min for a in apps])))
-                moved = False
-                for i in cand:
-                    if n[i] > floors[i]:
-                        n[i] -= 1
-                        moved = True
-                        break
-                if not moved:
-                    break
-                res = solver(apps, caps, n, alpha, beta, c_hint=c_hint)
-                if res.converged:
-                    break
+    history = []
+    ideal = None
+    cur = None
+
+    warm_ok = (
+        warm is not None
+        and len(warm.n) == M
+        and np.all(np.asarray(warm.n) >= 1)
+    )
+    if warm_ok:
+        n = np.asarray(warm.n, dtype=int).copy()
+        c_hint = np.asarray(warm.r_cpu, dtype=float).copy()
+        history.append({"stage": "warm_start", "n": n.tolist(), "U": float(warm.utility)})
+        res = solve_one(n, c_hint)
         if res.converged:
-            c, m = res.r_cpu, res.r_mem
-        history.append({"stage": "p1_initial", "n": n.tolist(), "U": res.utility})
+            cand = evaluate(apps, n, res.r_cpu, res.r_mem, caps, alpha, beta)
+            if cand.feasible and cand.stable:
+                cur = cand
+                history.append({"stage": "p1_warm", "n": n.tolist(), "U": res.utility})
+            else:
+                warm_ok = False
+        else:
+            warm_ok = False
 
-    cur = evaluate(apps, n, c, m, caps, alpha, beta)
+    if not warm_ok:
+        ideal = algorithm1(apps, caps, alpha, beta)
+        n = np.array([ic.n for ic in ideal], dtype=int)
+        c = np.array([ic.r_cpu for ic in ideal])
+        m = np.array([ic.r_mem for ic in ideal])
+        c_hint = c.copy()
+
+        total_cpu = float(np.sum(n * c))
+        total_mem = float(np.sum(n * m))
+        over = total_cpu > caps.r_cpu or total_mem > caps.r_mem
+
+        history.append({"stage": "algorithm1", "n": n.tolist(), "U": None})
+
+        if over:
+            n, ok = _pretrim_n(apps, caps, n, ideal)
+            res = solve_one(n, c_hint)
+            if not res.converged:
+                # fall back: keep trimming until P1 converges
+                for _ in range(int(np.sum(n))):
+                    floors = [max(_stability_floor(a, ch, a.r_max), 1) for a, ch in zip(apps, c_hint)]
+                    cand = np.argsort(-(n * np.array([a.r_min for a in apps])))
+                    moved = False
+                    for i in cand:
+                        if n[i] > floors[i]:
+                            n[i] -= 1
+                            moved = True
+                            break
+                    if not moved:
+                        break
+                    res = solve_one(n, c_hint)
+                    if res.converged:
+                        break
+            if res.converged:
+                c, m = res.r_cpu, res.r_mem
+            history.append({"stage": "p1_initial", "n": n.tolist(), "U": res.utility})
+
+        cur = evaluate(apps, n, c, m, caps, alpha, beta)
+    else:
+        over = True  # warm start implies the constrained regime was entered
 
     # Greedy refinement (Algorithm 2 lines 8-22). Beyond-paper strengthening
     # (DESIGN.md §8): the paper only tries N_i - 1; we also try N_i + 1 —
     # the decomposition's SP1-then-SP2 ordering can land below the joint
-    # optimum in N, and increments are equally cheap to evaluate.
+    # optimum in N, and increments are equally cheap to evaluate. All 2M
+    # neighbors of one iteration are solved in a single vmapped P1 batch.
+    floors = np.array(
+        [max(_stability_floor(apps[i], c_hint[i], apps[i].r_max), 1) for i in range(M)]
+    )
     for _ in range(max_refine_iters):
+        moves = [
+            (i, delta)
+            for i in range(M)
+            for delta in (-1, +1)
+            if n[i] + delta >= floors[i]
+        ]
+        if not moves:
+            break
         best = None
-        for i in range(len(apps)):
-            floor_i = max(_stability_floor(apps[i], c_hint[i], apps[i].r_max), 1)
-            for delta in (-1, +1):
-                if n[i] + delta < floor_i:
-                    continue
+        if solver is not None:
+            for i, delta in moves:
                 n_hat = n.copy()
                 n_hat[i] += delta
                 res = solver(apps, caps, n_hat, alpha, beta, c_hint=c_hint)
@@ -141,6 +205,25 @@ def crms(
                     continue
                 if best is None or cand.utility < best.utility:
                     best = cand
+        else:
+            n_cands = np.stack([n + delta * np.eye(M, dtype=int)[i] for i, delta in moves])
+            # the tuned "refine" barrier schedule: ~7x less Newton work per
+            # neighbor at ≤2e-9 relative utility drift (engine.P1_PROFILES)
+            batch = p1_solve_batch(
+                packed, caps, n_cands, alpha, beta, c_hint=c_hint, profile="refine"
+            )
+            u_cand, _, _ = evaluate_candidates(
+                packed, caps, n_cands.astype(float), batch.r_cpu, batch.r_mem,
+                alpha, beta, hard=True,
+            )
+            u_cand = np.where(batch.converged, u_cand, np.inf)
+            for j in np.argsort(u_cand):
+                if not np.isfinite(u_cand[j]) or u_cand[j] >= cur.utility - 1e-12:
+                    break
+                cand = evaluate(apps, n_cands[j], batch.r_cpu[j], batch.r_mem[j], caps, alpha, beta)
+                if cand.feasible and cand.stable:
+                    best = cand
+                    break
         if best is not None and best.utility < cur.utility - 1e-12:
             cur = best
             n = best.n.copy()
@@ -151,21 +234,23 @@ def crms(
     # If the sufficient-resource config was feasible from the start, Algorithm 2
     # still applies P1 once over the fixed N* to tighten quotas under the caps.
     if not over:
-        res = solver(apps, caps, n, alpha, beta, c_hint=c_hint)
+        res = solve_one(n, c_hint)
         if res.converged:
             cand = evaluate(apps, n, res.r_cpu, res.r_mem, caps, alpha, beta)
             if cand.feasible and cand.stable and cand.utility < cur.utility:
                 cur = cand
 
     cur.meta["history"] = history
-    cur.meta["ideal"] = [dataclasses.asdict(ic) for ic in ideal]
+    if ideal is not None:
+        cur.meta["ideal"] = [dataclasses.asdict(ic) for ic in ideal]
     return cur
 
 
 class QuasiDynamicAllocator:
     """§V-B quasi-dynamic execution: cache the allocation, re-run Algorithm 2
     only when monitored λ's drift by more than ``threshold`` (relative) or the
-    app mix changes."""
+    app mix changes. Re-optimizations for an unchanged mix warm-start from the
+    cached allocation (container counts + quota hints), skipping Algorithm 1."""
 
     def __init__(self, caps: ServerCaps, alpha: float, beta: float, threshold: float = 0.15):
         self.caps = caps
@@ -185,10 +270,12 @@ class QuasiDynamicAllocator:
         drift = np.abs(lam - self._lam) / np.maximum(self._lam, 1e-9)
         return bool(np.any(drift > self.threshold))
 
-    def allocate(self, apps: Sequence[App]) -> Allocation:
+    def allocate(self, apps: Sequence[App], packed=None) -> Allocation:
         if self.should_reoptimize(apps):
-            self._alloc = crms(apps, self.caps, self.alpha, self.beta)
+            names = tuple(a.name for a in apps)
+            warm = self._alloc if names == self._names else None
+            self._alloc = crms(apps, self.caps, self.alpha, self.beta, warm=warm, packed=packed)
             self._lam = np.array([a.lam for a in apps])
-            self._names = tuple(a.name for a in apps)
+            self._names = names
             self.reoptimizations += 1
         return self._alloc

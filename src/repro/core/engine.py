@@ -1,0 +1,527 @@
+"""Batched allocation engine (DESIGN.md §5): one packed-apps representation
+and vectorized solver paths shared by the whole stack.
+
+The first-class unit of work is a *batch of candidate allocations*: a (B, M)
+matrix of per-app container counts, solved jointly.
+
+PackedApps
+    The single array-of-structs packing of an ``App`` sequence, used by
+    ``solvers.py``, ``batch_eval.py``, ``baselines.py`` and the fleet binding.
+find_feasible_start_batch
+    The P1 phase-1 heuristic (memory waterfill + CPU scaling + stability
+    repair) vectorized in NumPy over the batch; infeasible rows are masked
+    out rather than short-circuited.
+p1_solve_batch
+    The log-barrier interior-point Newton of Theorem 4 under one jit(vmap)
+    over the batch. Serial ``solvers.p1_solve`` is the B=1 special case of
+    this path, so the batched and serial solvers cannot drift apart.
+ideal_configs_batch
+    Algorithm 1's inner solves — the SP1 bisection-on-dF/dc and the SP2
+    integer argmin over Φ(N) — vmapped over apps.
+
+All JAX paths run in float64 (enabled by repro.core).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property, partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import queueing
+from repro.core.perf_model import eq1_latency
+from repro.core.problem import App, ServerCaps
+
+
+# ----------------------------------------------------------------------------
+# PackedApps — the shared array-of-structs representation
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PackedApps:
+    """Array-of-structs packing of a Sequence[App] (all float64 NumPy)."""
+
+    kappa: np.ndarray  # (M, 3) Eq.(1) parameters
+    lam: np.ndarray  # (M,) arrival rates [req/s]
+    xbar: np.ndarray  # (M,) work units per request
+    r_min: np.ndarray  # (M,) memory floor [GB]
+    r_max: np.ndarray  # (M,) memory saturation [GB]
+    cpu_min: np.ndarray  # (M,) smallest CPU quota
+    cpu_max: np.ndarray  # (M,) largest CPU quota
+
+    @classmethod
+    def from_apps(cls, apps: Sequence[App]) -> "PackedApps":
+        return cls(
+            kappa=np.asarray([a.kappa for a in apps], dtype=np.float64),
+            lam=np.asarray([a.lam for a in apps], dtype=np.float64),
+            xbar=np.asarray([a.xbar for a in apps], dtype=np.float64),
+            r_min=np.asarray([a.r_min for a in apps], dtype=np.float64),
+            r_max=np.asarray([a.r_max for a in apps], dtype=np.float64),
+            cpu_min=np.asarray([a.cpu_min for a in apps], dtype=np.float64),
+            cpu_max=np.asarray([a.cpu_max for a in apps], dtype=np.float64),
+        )
+
+    @property
+    def M(self) -> int:
+        return int(self.lam.shape[0])
+
+    @cached_property
+    def jax_dict(self) -> dict:
+        """The pytree the jitted kernels take (cached: pack once, solve many)."""
+        return {
+            f.name: jnp.asarray(getattr(self, f.name), jnp.float64)
+            for f in dataclasses.fields(self)
+        }
+
+    def as_dict(self) -> dict:
+        # fresh shell over the cached leaves: callers may rebind keys for
+        # what-if evaluations without poisoning the shared packing
+        return dict(self.jax_dict)
+
+
+def as_packed(apps) -> PackedApps:
+    """Coerce a Sequence[App] (or an already-packed instance) to PackedApps."""
+    return apps if isinstance(apps, PackedApps) else PackedApps.from_apps(apps)
+
+
+def _eq1_np(kappa: np.ndarray, c, m):
+    """Eq. (1) in NumPy, broadcasting kappa (M,3) against (..., M) quotas."""
+    k1, k2, k3 = kappa[:, 0], kappa[:, 1], kappa[:, 2]
+    return k1 / (1.0 - np.exp(-k2 * c)) + np.exp(k3 / m)
+
+
+# ----------------------------------------------------------------------------
+# P1 objective / barrier (Theorem 4) — shared by serial and batched paths
+# ----------------------------------------------------------------------------
+def p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
+    """Σ_i α Ws_i + β ΔP_i/λ_i as a function of x = [c_1..c_M, m_1..m_M]."""
+    M = packed["lam"].shape[0]
+    c, m = x[:M], x[M:]
+    d_ms = eq1_latency(
+        (packed["kappa"][:, 0], packed["kappa"][:, 1], packed["kappa"][:, 2]), c, m
+    )
+    mu = 1000.0 / (packed["xbar"] * d_ms)
+    ws = jax.vmap(queueing.erlang_ws)(n, packed["lam"], mu)
+    dp = power_span * n * c / caps_cpu
+    return jnp.sum(alpha * ws + beta * dp / packed["lam"])
+
+
+def p1_barrier(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
+    M = packed["lam"].shape[0]
+    c, m = x[:M], x[M:]
+    f = p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta)
+    slacks = jnp.concatenate(
+        [
+            jnp.asarray([caps_cpu - jnp.sum(n * c), caps_mem - jnp.sum(n * m)]),
+            m - packed["r_min"],
+            packed["r_max"] - m,
+            c - packed["cpu_min"],
+        ]
+    )
+    barrier = -jnp.sum(jnp.log(slacks))
+    return t * f + barrier, slacks
+
+
+def p1_rho(x, packed, n):
+    M = packed["lam"].shape[0]
+    c, m = x[:M], x[M:]
+    d_ms = eq1_latency(
+        (packed["kappa"][:, 0], packed["kappa"][:, 1], packed["kappa"][:, 2]), c, m
+    )
+    mu = 1000.0 / (packed["xbar"] * d_ms)
+    return packed["lam"] / (n * mu)
+
+
+def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer, n_inner):
+    """Log-barrier interior point: t <- t*mu_t, damped Newton inner loop with a
+    feasibility-preserving backtracking line search (rejects steps that leave
+    the barrier domain or the queue-stability region)."""
+
+    def strictly_feasible(x):
+        _, slacks = p1_barrier(x, 1.0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta)
+        rho = p1_rho(x, packed, n)
+        return jnp.logical_and(jnp.all(slacks > 0), jnp.all(rho < 1.0 - 1e-7))
+
+    def inner(x, t):
+        def newton_step(x, _):
+            val_fn = lambda xx: p1_barrier(
+                xx, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta
+            )[0]
+            g = jax.grad(val_fn)(x)
+            H = jax.hessian(val_fn)(x)
+            dim = x.shape[0]
+            H = H + 1e-9 * jnp.eye(dim, dtype=x.dtype)
+            dx = jnp.linalg.solve(H, g)
+            cur = val_fn(x)
+
+            def try_alpha(acc, a):
+                best_x, best_val, found = acc
+                cand = x - a * dx
+                ok = strictly_feasible(cand)
+                v = jnp.where(ok, val_fn(cand), jnp.inf)
+                better = jnp.logical_and(v < best_val, ~found)
+                best_x = jnp.where(better, cand, best_x)
+                best_val = jnp.where(better, v, best_val)
+                found = jnp.logical_or(found, better)
+                return (best_x, best_val, found), None
+
+            alphas = jnp.asarray([1.0, 0.5, 0.25, 0.1, 0.03, 0.01, 3e-3, 1e-3], x.dtype)
+            (x_new, _, found), _ = jax.lax.scan(try_alpha, (x, cur, jnp.asarray(False)), alphas)
+            return jnp.where(found, x_new, x), None
+
+        x, _ = jax.lax.scan(newton_step, x, None, length=n_inner)
+        return x
+
+    def outer(carry, _):
+        x, t = carry
+        x = inner(x, t)
+        return (x, t * 6.0), None
+
+    (x, _), _ = jax.lax.scan(outer, (x0, jnp.asarray(1.0, x0.dtype)), None, length=n_outer)
+    return x
+
+
+@partial(jax.jit, static_argnames=("n_outer", "n_inner"))
+def _ip_solve_batched(
+    x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta,
+    n_outer=14, n_inner=24,
+):
+    """One jitted vmap over a (B, 2M) batch of starts + (B, M) counts. Returns
+    (x* (B, 2M), utility (B,))."""
+
+    def one(x0_i, n_i):
+        x = _ip_core(x0_i, packed, n_i, caps_cpu, caps_mem, power_span, alpha, beta, n_outer, n_inner)
+        u = p1_objective(x, packed, n_i, caps_cpu, caps_mem, power_span, alpha, beta)
+        return x, u
+
+    return jax.vmap(one)(x0, n)
+
+
+# ----------------------------------------------------------------------------
+# Phase-1 feasible start, vectorized over the batch (NumPy)
+# ----------------------------------------------------------------------------
+def find_feasible_start_batch(packed, caps: ServerCaps, n_batch, c_hint=None):
+    """Phase-1 heuristic over a (B, M) batch of container-count vectors:
+    memory waterfill + CPU proportional scaling + a stability repair pass.
+    Rows with no strictly feasible interior point are masked (ok=False) and
+    their x0 contents are unspecified. Returns (x0 (B, 2M), ok (B,))."""
+    packed = as_packed(packed)
+    n = np.asarray(n_batch, dtype=float)
+    B, M = n.shape
+    r_min, r_max = packed.r_min, packed.r_max
+    cpu_min = packed.cpu_min
+    k1, k3 = packed.kappa[:, 0], packed.kappa[:, 2]
+    lam, xbar = packed.lam, packed.xbar
+    ok = np.ones(B, dtype=bool)
+
+    with np.errstate(all="ignore"):
+        # memory: m = r_min + phi (r_max - r_min), largest phi in [0, .95]
+        # fitting the budget
+        base = np.sum(n * r_min, axis=1)
+        spread = np.sum(n * (r_max - r_min), axis=1)
+        ok &= ~(base > 0.98 * caps.r_mem)
+        phi_frac = np.minimum(
+            0.95, np.maximum(0.0, (0.95 * caps.r_mem - base) / np.maximum(spread, 1e-9))
+        )
+        m0 = r_min + phi_frac[:, None] * (r_max - r_min)
+
+        # cpu: scale the hint (sufficient-resource optimum) into the budget
+        if c_hint is None:
+            c_hint = np.ones(M)
+        c_hint = np.asarray(c_hint, dtype=float)
+        c_hint = np.broadcast_to(c_hint, (B, M)) if c_hint.ndim == 1 else c_hint
+        scale = np.minimum(
+            1.0, 0.95 * caps.r_cpu / np.maximum(np.sum(n * c_hint, axis=1), 1e-9)
+        )
+        c0 = np.maximum(c_hint * scale[:, None], cpu_min * 1.5 + 1e-5)
+
+        # memory repair: two-tier waterfill — a hard floor (mem term <= 90% of
+        # the latency cap, bare stabilizability) plus proportional headroom
+        # toward a comfortable 60%-of-cap target, within the global budget
+        d_cap_ms = 0.92 * n * 1000.0 / (lam * xbar)  # (B, M)
+        hard, soft = 0.9 * d_cap_ms, 0.6 * d_cap_ms
+        ok &= ~np.any(hard <= 1.05, axis=1)  # latency cap below the e^0 floor
+        floor = k3 / np.log(np.maximum(hard, 1.0 + 1e-12))
+        ok &= ~np.any(floor > r_max + 1e-9, axis=1)  # no memory can stabilize
+        m_bare = np.clip(np.maximum(floor * 1.01, r_min), r_min, r_max)
+        pref = k3 / np.log(np.maximum(soft, 1.06))
+        m_pref = np.clip(np.maximum(pref * 1.01, m0), m_bare, r_max)
+        bare_need = np.sum(n * m_bare, axis=1)
+        ok &= ~(bare_need > 0.98 * caps.r_mem)
+        spread2 = np.sum(n * (m_pref - m_bare), axis=1)
+        phi2 = np.where(
+            spread2 <= 1e-12,
+            1.0,
+            np.minimum(1.0, (0.98 * caps.r_mem - bare_need) / np.where(spread2 <= 1e-12, 1.0, spread2)),
+        )
+        m0 = m_bare + phi2[:, None] * (m_pref - m_bare)
+
+        # stability repair: each app needs d(c, m0) < N/(λ x̄) * 1000 ms
+        for _ in range(40):
+            d_now = _eq1_np(packed.kappa, c0, m0)
+            bad = d_now >= d_cap_ms  # (B, M)
+            active = np.any(bad, axis=1)  # rows still being repaired
+            if not np.any(active & ok):
+                break
+            mem_term = np.exp(k3 / m0)
+            ok &= ~np.any(bad & (k1 + mem_term >= d_cap_ms), axis=1)  # infinite cpu won't do
+            # bisect the cpu needed for d = d_cap (d decreasing in c), all
+            # (B, M) lanes at once — non-bad lanes are discarded by the mask
+            lo = np.broadcast_to(cpu_min, (B, M)).copy()
+            hi = np.broadcast_to(packed.cpu_max, (B, M)).copy()
+            for _ in range(60):
+                mid = 0.5 * (lo + hi)
+                too_slow = _eq1_np(packed.kappa, mid, m0) >= d_cap_ms
+                lo = np.where(too_slow, mid, lo)
+                hi = np.where(too_slow, hi, mid)
+            c0 = np.where(bad, np.maximum(c0, hi), c0)
+            # over-budget rows shrink the non-binding apps proportionally
+            total = np.sum(n * c0, axis=1)
+            over = active & (total > 0.98 * caps.r_cpu)
+            fixed = np.sum(np.where(bad, n * c0, 0.0), axis=1)
+            ok &= ~(over & (fixed > 0.98 * caps.r_cpu))
+            room = 0.98 * caps.r_cpu - fixed
+            cur = np.sum(np.where(bad, 0.0, n * c0), axis=1)
+            shrink_row = over & (cur > room)
+            shrink = np.where(cur > 0, room / np.maximum(cur, 1e-300), 1.0)
+            c0 = np.where(
+                shrink_row[:, None] & ~bad,
+                np.maximum(c0 * shrink[:, None], cpu_min * 1.5),
+                c0,
+            )
+
+    x0 = np.concatenate([c0, m0], axis=1)
+    return x0, ok
+
+
+# ----------------------------------------------------------------------------
+# Batched P1 solve
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass
+class P1Result:
+    r_cpu: np.ndarray
+    r_mem: np.ndarray
+    utility: float
+    converged: bool
+    info: dict
+
+
+@dataclasses.dataclass
+class P1BatchResult:
+    """A (B,)-batch of P1 solutions; ``row(i)`` views one as a P1Result."""
+
+    r_cpu: np.ndarray  # (B, M)
+    r_mem: np.ndarray  # (B, M)
+    utility: np.ndarray  # (B,)
+    converged: np.ndarray  # (B,) bool
+    started: np.ndarray  # (B,) bool — phase-1 found a feasible interior point
+    info: dict
+
+    def row(self, i: int) -> P1Result:
+        info = dict(self.info)
+        if not self.started[i]:
+            info.setdefault("reason", "no_feasible_start")
+        elif not self.converged[i]:
+            info.setdefault("reason", "diverged")
+        return P1Result(
+            r_cpu=self.r_cpu[i].copy(),
+            r_mem=self.r_mem[i].copy(),
+            utility=float(self.utility[i]),
+            converged=bool(self.converged[i]),
+            info=info,
+        )
+
+
+def _pad_pow2(B: int) -> int:
+    return 1 << max(B - 1, 0).bit_length()
+
+
+# Barrier-schedule profiles (n_outer, n_inner). "reference" mirrors the seed
+# serial solver — heavily over-converged (duality gap ~1e-10 relative).
+# "refine" is the schedule the CRMS greedy refinement and the throughput
+# benchmark use: ~7x less Newton work for ≤2e-9 relative utility drift on the
+# evaluation scenarios (pinned by tests/test_engine.py and BENCH_solver.json).
+P1_PROFILES = {"reference": (14, 24), "refine": (12, 4)}
+
+
+def p1_solve_batch(
+    apps,
+    caps: ServerCaps,
+    n_batch,
+    alpha: float,
+    beta: float,
+    c_hint=None,
+    n_outer: int | None = None,
+    n_inner: int | None = None,
+    pad: bool = True,
+    profile: str = "reference",
+) -> P1BatchResult:
+    """Solve Problem P1 (Eq. 26) for every row of a (B, M) batch of container
+    counts in ONE vmapped interior-point call.
+
+    ``apps`` may be a Sequence[App] or an already-built PackedApps. Rows with
+    no phase-1 feasible start come back with utility=inf / converged=False;
+    the remaining lanes are solved jointly (infeasible lanes are filled with a
+    feasible row's data so the vmap stays dense, then masked out). ``pad``
+    rounds B up to a power of two so the jit cache stays warm as the CRMS
+    move set shrinks between refinement iterations. ``profile`` picks the
+    barrier schedule (see P1_PROFILES); explicit n_outer/n_inner override it.
+    """
+    prof_outer, prof_inner = P1_PROFILES[profile]
+    n_outer = prof_outer if n_outer is None else n_outer
+    n_inner = prof_inner if n_inner is None else n_inner
+    packed = as_packed(apps)
+    n_np = np.asarray(n_batch, dtype=float)
+    if n_np.ndim != 2:
+        raise ValueError(f"n_batch must be (B, M), got shape {n_np.shape}")
+    B, M = n_np.shape
+    x0, ok = find_feasible_start_batch(packed, caps, n_np, c_hint=c_hint)
+
+    r_cpu = np.zeros((B, M))
+    r_mem = np.broadcast_to(packed.r_min, (B, M)).copy()
+    utility = np.full(B, np.inf)
+    converged = np.zeros(B, dtype=bool)
+    if not np.any(ok):
+        return P1BatchResult(
+            r_cpu, r_mem, utility, converged, started=ok, info={"n_feasible_start": 0}
+        )
+
+    sub = int(np.argmax(ok))  # donor row for masked-out lanes
+    x0 = np.where(ok[:, None], x0, x0[sub])
+    n_solve = np.where(ok[:, None], n_np, n_np[sub])
+    Bp = _pad_pow2(B) if pad else B
+    if Bp > B:
+        x0 = np.concatenate([x0, np.broadcast_to(x0[sub], (Bp - B, 2 * M))], axis=0)
+        n_solve = np.concatenate([n_solve, np.broadcast_to(n_solve[sub], (Bp - B, M))], axis=0)
+
+    x, u = _ip_solve_batched(
+        jnp.asarray(x0),
+        packed.as_dict(),
+        jnp.asarray(n_solve),
+        jnp.asarray(float(caps.r_cpu)),
+        jnp.asarray(float(caps.r_mem)),
+        jnp.asarray(float(caps.power.span)),
+        float(alpha),
+        float(beta),
+        n_outer=n_outer,
+        n_inner=n_inner,
+    )
+    x = np.asarray(x)[:B]
+    u = np.asarray(u)[:B]
+    r_cpu = np.where(ok[:, None], x[:, :M], r_cpu)
+    r_mem = np.where(ok[:, None], x[:, M:], r_mem)
+    utility = np.where(ok, u, np.inf)
+    converged = ok & np.isfinite(utility)
+    return P1BatchResult(
+        r_cpu, r_mem, utility, converged, started=ok,
+        info={"n_feasible_start": int(ok.sum()), "batch": B, "padded_to": Bp},
+    )
+
+
+# ----------------------------------------------------------------------------
+# Algorithm 1 inner solves, vmapped over apps
+# ----------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("iters",))
+def _sp1_batch(packed, caps_cpu, power_span, alpha, beta, iters=100):
+    """SP1 for every app at once: m* = r_max (Theorem-2 monotonicity), c* by
+    bisection on dF/dc with the box edges handled by masks."""
+    k1, k2 = packed["kappa"][:, 0], packed["kappa"][:, 1]
+    lam, xbar = packed["lam"], packed["xbar"]
+
+    def dF_dc(c):
+        e = jnp.exp(-k2 * c)
+        d_latency = -k1 * k2 * e / (1.0 - e) ** 2
+        return alpha * xbar * 1e-3 * d_latency + beta * power_span / (caps_cpu * lam)
+
+    lo0, hi0 = packed["cpu_min"], packed["cpu_max"]
+    g_lo, g_hi = dF_dc(lo0), dF_dc(hi0)
+
+    def body(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        g = dF_dc(mid)
+        lo = jnp.where(g < 0, mid, lo)
+        hi = jnp.where(g < 0, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+    c = 0.5 * (lo + hi)
+    # still decreasing at cpu_max -> box edge; increasing at cpu_min -> floor
+    c = jnp.where(g_hi < 0, hi0, jnp.where(g_lo > 0, lo0, c))
+    return c, packed["r_max"]
+
+
+def sp1_solve_batch(apps, caps: ServerCaps, alpha: float, beta: float, iters: int = 100):
+    """Vectorized SP1: returns (r_cpu* (M,), r_mem* (M,)) as NumPy arrays."""
+    packed = as_packed(apps)
+    c, m = _sp1_batch(
+        packed.as_dict(),
+        jnp.asarray(float(caps.r_cpu)),
+        jnp.asarray(float(caps.power.span)),
+        float(alpha),
+        float(beta),
+        iters=iters,
+    )
+    return np.asarray(c), np.asarray(m)
+
+
+@jax.jit
+def _phi_grid(lam, mu, c, power_span, caps_cpu, alpha, beta, ns):
+    """Φ(N) of Eq. (23) on an (M, K) grid of container counts."""
+
+    def per_app(lam_i, mu_i, c_i):
+        def per_n(n):
+            ws = queueing.erlang_ws(n, lam_i, mu_i)
+            dp = power_span * n * c_i / caps_cpu
+            return alpha * ws + beta * dp / lam_i
+
+        return jax.vmap(per_n)(ns)
+
+    return jax.vmap(per_app)(lam, mu, c)
+
+
+def sp2_argmin_batch(apps, caps: ServerCaps, alpha, beta, mu_star, c_star, m_star):
+    """Vectorized SP2: per-app argmin of convex Φ over the stable feasible
+    range [stability floor, cap-implied ceiling] — the exhaustive oracle the
+    serial ternary search is tested against, evaluated as one (M, K) grid."""
+    packed = as_packed(apps)
+    mu_star = np.asarray(mu_star, dtype=float)
+    c_star = np.asarray(c_star, dtype=float)
+    m_star = np.asarray(m_star, dtype=float)
+    lo = np.array(
+        [queueing.stability_lower_bound(l, mu) for l, mu in zip(packed.lam, mu_star)],
+        dtype=int,
+    )
+    hi = np.minimum(caps.r_cpu / c_star, caps.r_mem / m_star).astype(int)
+    hi = np.minimum(np.maximum(hi, lo), queueing.MAX_SERVERS - 1)
+    K = _pad_pow2(int(hi.max()))
+    ns = jnp.arange(1, K + 1, dtype=jnp.float64)
+    vals = np.asarray(
+        _phi_grid(
+            jnp.asarray(packed.lam),
+            jnp.asarray(mu_star),
+            jnp.asarray(c_star),
+            jnp.asarray(float(caps.power.span)),
+            jnp.asarray(float(caps.r_cpu)),
+            float(alpha),
+            float(beta),
+            ns,
+        )
+    )
+    grid = np.arange(1, K + 1)
+    mask = (grid[None, :] >= lo[:, None]) & (grid[None, :] <= hi[:, None])
+    vals = np.where(mask & np.isfinite(vals), vals, np.inf)
+    return grid[np.argmin(vals, axis=1)].astype(int)
+
+
+def ideal_configs_batch(apps, caps: ServerCaps, alpha: float, beta: float):
+    """Algorithm 1's per-app ideal configs, vectorized over apps. Returns
+    (r_cpu* (M,), r_mem* (M,), n* (M,) int, mu* (M,))."""
+    packed = as_packed(apps)
+    c_star, m_star = sp1_solve_batch(packed, caps, alpha, beta)
+    d_ms = _eq1_np(packed.kappa, c_star, m_star)
+    mu_star = 1000.0 / (packed.xbar * d_ms)
+    n_star = sp2_argmin_batch(packed, caps, alpha, beta, mu_star, c_star, m_star)
+    return c_star, m_star, n_star, mu_star

@@ -63,8 +63,10 @@ def step_latency_ms(w: WorkloadCost, chips, batch):
     chips = np.asarray(chips, dtype=float)
     batch = np.asarray(batch, dtype=float)
     flops = w.flops_per_tok * batch
-    # params are re-read once per step regardless of batch; activations/KV scale with batch
-    bytes_ = w.params_bytes + (w.bytes_per_tok + w.kv_bytes_per_seq * 0.0) * batch + w.kv_bytes_per_seq * batch
+    # params are re-read once per step regardless of batch; activation traffic
+    # (bytes_per_tok, which excludes KV by construction) and the KV read each
+    # scale with batch — KV is counted exactly once here
+    bytes_ = w.params_bytes + (w.bytes_per_tok + w.kv_bytes_per_seq) * batch
     coll = w.coll_bytes_per_tok * batch + 2.0 * np.log2(np.maximum(chips, 2.0)) * 1e4
     t = flops / (chips * PEAK_FLOPS) + bytes_ / (chips * HBM_BW) + coll / (chips * LINK_BW)
     return t * 1e3  # ms
@@ -131,6 +133,21 @@ def build_fleet_apps(
             )
         )
     return apps
+
+
+def build_fleet_engine(
+    workloads: Sequence[WorkloadCost] | None = None,
+    n_chips: int = 256,
+    seed: int = 0,
+):
+    """One-stop fleet binding for the batched engine: fit Eq. (1) per workload,
+    pack the app set once (engine.PackedApps — pack once, solve many candidate
+    batches), and size the pod caps. Returns (apps, packed, caps)."""
+    from repro.core.engine import PackedApps
+
+    workloads = workloads or default_workloads()
+    apps = build_fleet_apps(workloads, seed=seed)
+    return apps, PackedApps.from_apps(apps), pod_caps(n_chips)
 
 
 def pod_caps(n_chips: int = 256) -> ServerCaps:

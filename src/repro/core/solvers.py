@@ -9,12 +9,14 @@ P1   — constrained joint reallocation over (r_cpu_i, r_mem_i) with N fixed
        (Theorem 4: convex) — log-barrier interior-point Newton in pure JAX,
        with a scipy SLSQP cross-check path (the paper's own solver).
 
+The heavy lifting (packing, phase-1, the interior-point core) lives in
+``repro.core.engine``; the serial ``p1_solve`` here is the B=1 special case
+of ``engine.p1_solve_batch``, so the two paths cannot drift apart.
+
 All JAX paths run in float64 (enabled by repro.core).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Sequence
 
 import jax
@@ -22,8 +24,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import queueing
+from repro.core.engine import (  # noqa: F401 — re-exported solver surface
+    P1BatchResult,
+    P1Result,
+    PackedApps,
+    as_packed,
+    find_feasible_start_batch,
+    p1_objective,
+    p1_solve_batch,
+)
 from repro.core.perf_model import eq1_latency
 from repro.core.problem import App, ServerCaps
+
+# Back-compat aliases (tests/test_theorems.py exercises these directly).
+_p1_objective = p1_objective
+
+
+def _pack_apps(apps: Sequence[App]) -> dict:
+    return as_packed(apps).as_dict()
 
 
 # ----------------------------------------------------------------------------
@@ -112,204 +130,15 @@ def sp2_exhaustive(app, caps, alpha, beta, mu_star, r_cpu_star, r_mem_star) -> i
 # ----------------------------------------------------------------------------
 # P1 — constrained joint reallocation (N fixed) — interior-point Newton in JAX
 # ----------------------------------------------------------------------------
-@dataclasses.dataclass
-class P1Result:
-    r_cpu: np.ndarray
-    r_mem: np.ndarray
-    utility: float
-    converged: bool
-    info: dict
-
-
-def _pack_apps(apps: Sequence[App]):
-    return dict(
-        kappa=jnp.asarray([a.kappa for a in apps], jnp.float64),  # (M,3)
-        lam=jnp.asarray([a.lam for a in apps], jnp.float64),
-        xbar=jnp.asarray([a.xbar for a in apps], jnp.float64),
-        r_min=jnp.asarray([a.r_min for a in apps], jnp.float64),
-        r_max=jnp.asarray([a.r_max for a in apps], jnp.float64),
-        cpu_min=jnp.asarray([a.cpu_min for a in apps], jnp.float64),
-    )
-
-
-def _p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
-    """Σ_i α Ws_i + β ΔP_i/λ_i as a function of x = [c_1..c_M, m_1..m_M]."""
-    M = packed["lam"].shape[0]
-    c, m = x[:M], x[M:]
-    d_ms = eq1_latency(
-        (packed["kappa"][:, 0], packed["kappa"][:, 1], packed["kappa"][:, 2]), c, m
-    )
-    mu = 1000.0 / (packed["xbar"] * d_ms)
-    ws = jax.vmap(queueing.erlang_ws)(n, packed["lam"], mu)
-    dp = power_span * n * c / caps_cpu
-    return jnp.sum(alpha * ws + beta * dp / packed["lam"])
-
-
-def _p1_barrier(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
-    M = packed["lam"].shape[0]
-    c, m = x[:M], x[M:]
-    f = _p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta)
-    slacks = jnp.concatenate(
-        [
-            jnp.asarray([caps_cpu - jnp.sum(n * c), caps_mem - jnp.sum(n * m)]),
-            m - packed["r_min"],
-            packed["r_max"] - m,
-            c - packed["cpu_min"],
-        ]
-    )
-    barrier = -jnp.sum(jnp.log(slacks))
-    return t * f + barrier, slacks
-
-
-def _rho(x, packed, n):
-    M = packed["lam"].shape[0]
-    c, m = x[:M], x[M:]
-    d_ms = eq1_latency(
-        (packed["kappa"][:, 0], packed["kappa"][:, 1], packed["kappa"][:, 2]), c, m
-    )
-    mu = 1000.0 / (packed["xbar"] * d_ms)
-    return packed["lam"] / (n * mu)
-
-
-@partial(jax.jit, static_argnames=("n_outer", "n_inner"))
-def _p1_ip_solve(
-    x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta,
-    n_outer=14, n_inner=24,
-):
-    """Log-barrier interior point: t <- t*mu_t, damped Newton inner loop with a
-    feasibility-preserving backtracking line search (rejects steps that leave
-    the barrier domain or the queue-stability region)."""
-
-    def strictly_feasible(x):
-        _, slacks = _p1_barrier(x, 1.0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta)
-        rho = _rho(x, packed, n)
-        return jnp.logical_and(jnp.all(slacks > 0), jnp.all(rho < 1.0 - 1e-7))
-
-    def inner(x, t):
-        def newton_step(x, _):
-            val_fn = lambda xx: _p1_barrier(
-                xx, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta
-            )[0]
-            g = jax.grad(val_fn)(x)
-            H = jax.hessian(val_fn)(x)
-            dim = x.shape[0]
-            H = H + 1e-9 * jnp.eye(dim, dtype=x.dtype)
-            dx = jnp.linalg.solve(H, g)
-            cur = val_fn(x)
-
-            def try_alpha(acc, a):
-                best_x, best_val, found = acc
-                cand = x - a * dx
-                ok = strictly_feasible(cand)
-                v = jnp.where(ok, val_fn(cand), jnp.inf)
-                better = jnp.logical_and(v < best_val, ~found)
-                best_x = jnp.where(better, cand, best_x)
-                best_val = jnp.where(better, v, best_val)
-                found = jnp.logical_or(found, better)
-                return (best_x, best_val, found), None
-
-            alphas = jnp.asarray([1.0, 0.5, 0.25, 0.1, 0.03, 0.01, 3e-3, 1e-3], x.dtype)
-            (x_new, _, found), _ = jax.lax.scan(try_alpha, (x, cur, jnp.asarray(False)), alphas)
-            return jnp.where(found, x_new, x), None
-
-        x, _ = jax.lax.scan(newton_step, x, None, length=n_inner)
-        return x
-
-    def outer(carry, _):
-        x, t = carry
-        x = inner(x, t)
-        return (x, t * 6.0), None
-
-    (x, _), _ = jax.lax.scan(outer, (x0, jnp.asarray(1.0, x0.dtype)), None, length=n_outer)
-    return x
-
-
 def _find_feasible_start(apps, caps, n, c_hint=None):
-    """Phase-1 heuristic: memory waterfill + CPU proportional scaling + a
-    stability repair pass. Returns (x0, ok)."""
-    M = len(apps)
-    n = np.asarray(n, dtype=float)
-    r_min = np.array([a.r_min for a in apps])
-    r_max = np.array([a.r_max for a in apps])
-    # memory: m = r_min + phi (r_max - r_min), largest phi in [0, .95] fitting budget
-    base, spread = float(np.sum(n * r_min)), float(np.sum(n * (r_max - r_min)))
-    if base > 0.98 * caps.r_mem:
-        return None, False
-    phi_frac = min(0.95, max(0.0, (0.95 * caps.r_mem - base) / max(spread, 1e-9)))
-    m0 = r_min + phi_frac * (r_max - r_min)
-    # cpu: scale the hint (sufficient-resource optimum) into the budget
-    if c_hint is None:
-        c_hint = np.ones(M)
-    c_hint = np.asarray(c_hint, dtype=float)
-    scale = min(1.0, 0.95 * caps.r_cpu / max(float(np.sum(n * c_hint)), 1e-9))
-    c0 = np.maximum(c_hint * scale, [a.cpu_min * 1.5 + 1e-5 for a in apps])
-    # memory repair first: apps whose memory term alone breaks stability at
-    # the waterfilled m0 (e^{k3/m} >= d_cap) get memory raised to where the
-    # memory term uses at most 60% of their latency budget
-    # memory repair: each app needs its memory term e^{k3/m} well below its
-    # latency cap. Two-tier waterfill: a hard floor (mem term <= 90% of cap —
-    # bare stabilizability) plus proportional headroom toward a comfortable
-    # 60%-of-cap target, within the global budget.
-    m_bare = m0.copy()
-    m_pref = m0.copy()
-    for i, a in enumerate(apps):
-        d_cap_ms = 0.92 * n[i] * 1000.0 / (a.lam * a.xbar)
-        hard, soft = 0.9 * d_cap_ms, 0.6 * d_cap_ms
-        if hard <= 1.05:
-            return None, False  # latency cap below the e^0 floor: hopeless
-        floor_i = a.kappa[2] / np.log(hard)
-        if floor_i > a.r_max + 1e-9:
-            return None, False  # no memory can stabilize this app
-        m_bare[i] = float(np.clip(max(floor_i * 1.01, a.r_min), a.r_min, a.r_max))
-        pref_i = a.kappa[2] / np.log(max(soft, 1.06))
-        m_pref[i] = float(np.clip(max(pref_i * 1.01, m0[i]), m_bare[i], a.r_max))
-    if float(np.sum(n * m_bare)) > 0.98 * caps.r_mem:
-        return None, False
-    spread2 = float(np.sum(n * (m_pref - m_bare)))
-    phi2 = 1.0 if spread2 <= 1e-12 else min(
-        1.0, (0.98 * caps.r_mem - float(np.sum(n * m_bare))) / spread2
+    """Phase-1 heuristic (B=1 view of engine.find_feasible_start_batch).
+    Returns (x0, ok)."""
+    x0, ok = find_feasible_start_batch(
+        as_packed(apps), caps, np.asarray(n, dtype=float)[None, :], c_hint=c_hint
     )
-    m0 = m_bare + phi2 * (m_pref - m_bare)
-
-    # stability repair: each app needs d(c,m0) < N/(λ x̄) * 1000 ms
-    for _ in range(40):
-        bad, needs = [], np.zeros(M)
-        for i, a in enumerate(apps):
-            d_cap_ms = 0.92 * n[i] * 1000.0 / (a.lam * a.xbar)
-            d_now = float(eq1_latency(np.asarray(a.kappa), c0[i], m0[i]))
-            if d_now >= d_cap_ms:
-                # bisect the cpu needed for d = d_cap (d decreasing in c)
-                lo, hi = a.cpu_min, a.cpu_max
-                mem_term = float(np.exp(a.kappa[2] / m0[i]))
-                if a.kappa[0] + mem_term >= d_cap_ms:  # even infinite cpu won't do
-                    return None, False
-                for _ in range(60):
-                    mid = 0.5 * (lo + hi)
-                    if float(eq1_latency(np.asarray(a.kappa), mid, m0[i])) >= d_cap_ms:
-                        lo = mid
-                    else:
-                        hi = mid
-                bad.append(i)
-                needs[i] = hi
-        if not bad:
-            break
-        for i in bad:
-            c0[i] = max(c0[i], needs[i])
-        total = float(np.sum(n * c0))
-        if total > 0.98 * caps.r_cpu:
-            # shrink the non-binding apps proportionally to make room
-            fixed = float(np.sum(n[bad] * c0[bad]))
-            if fixed > 0.98 * caps.r_cpu:
-                return None, False
-            others = [i for i in range(M) if i not in bad]
-            room = 0.98 * caps.r_cpu - fixed
-            cur = float(np.sum(n[others] * c0[others]))
-            if cur > room:
-                shrink = room / cur
-                for i in others:
-                    c0[i] = max(c0[i] * shrink, apps[i].cpu_min * 1.5)
-    x0 = np.concatenate([c0, m0])
-    return x0, True
+    if not ok[0]:
+        return None, False
+    return x0[0], True
 
 
 def p1_solve(
@@ -320,36 +149,13 @@ def p1_solve(
     beta: float,
     c_hint=None,
 ) -> P1Result:
-    """Solve Problem P1 (Eq. 26) with N fixed. JAX interior-point primary path."""
-    packed = _pack_apps(apps)
-    n_arr = jnp.asarray(np.asarray(n, dtype=float))
-    x0, ok = _find_feasible_start(apps, caps, n, c_hint=c_hint)
-    if not ok:
-        return P1Result(
-            r_cpu=np.zeros(len(apps)),
-            r_mem=np.array([a.r_min for a in apps]),
-            utility=float("inf"),
-            converged=False,
-            info={"reason": "no_feasible_start"},
-        )
-    x = _p1_ip_solve(
-        jnp.asarray(x0),
-        packed,
-        n_arr,
-        jnp.asarray(float(caps.r_cpu)),
-        jnp.asarray(float(caps.r_mem)),
-        jnp.asarray(float(caps.power.span)),
-        float(alpha),
-        float(beta),
+    """Solve Problem P1 (Eq. 26) with N fixed. JAX interior-point primary path
+    — the B=1 case of the batched engine."""
+    batch = p1_solve_batch(
+        as_packed(apps), caps, np.asarray(n, dtype=float)[None, :], alpha, beta,
+        c_hint=c_hint,
     )
-    M = len(apps)
-    c, m = np.asarray(x[:M]), np.asarray(x[M:])
-    u = float(
-        _p1_objective(
-            jnp.asarray(x), packed, n_arr, caps.r_cpu, caps.r_mem, caps.power.span, alpha, beta
-        )
-    )
-    return P1Result(r_cpu=c, r_mem=m, utility=u, converged=bool(np.isfinite(u)), info={})
+    return batch.row(0)
 
 
 def p1_solve_scipy(apps, caps, n, alpha, beta, c_hint=None) -> P1Result:
@@ -364,7 +170,7 @@ def p1_solve_scipy(apps, caps, n, alpha, beta, c_hint=None) -> P1Result:
         return P1Result(np.zeros(M), np.array([a.r_min for a in apps]), float("inf"), False, {"reason": "no_feasible_start"})
 
     fun = jax.jit(
-        lambda x: _p1_objective(
+        lambda x: p1_objective(
             x, packed, n_arr, caps.r_cpu, caps.r_mem, caps.power.span, alpha, beta
         )
     )

@@ -19,6 +19,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.crms import QuasiDynamicAllocator
+from repro.core.engine import PackedApps
 from repro.core.fleet import (
     WorkloadCost,
     build_fleet_apps,
@@ -44,13 +45,17 @@ class FleetManager:
         self.workloads = workloads or default_workloads()
         self.caps = pod_caps(n_chips)
         self.apps = build_fleet_apps(self.workloads, seed=seed)
+        # the fleet owns the engine packing: one PackedApps per observation
+        # epoch, shared by every batched P1/utility evaluation underneath
+        self.packed = PackedApps.from_apps(self.apps)
         self.allocator = QuasiDynamicAllocator(self.caps, alpha, beta, threshold)
 
     def observe(self, lam: dict[str, float]):
         self.apps = [a.with_lam(lam.get(a.name, a.lam)) for a in self.apps]
+        self.packed = PackedApps.from_apps(self.apps)
 
     def plan(self) -> tuple[Allocation, list[ReplicaGroup]]:
-        alloc = self.allocator.allocate(self.apps)
+        alloc = self.allocator.allocate(self.apps, packed=self.packed)
         groups = []
         for i, (app, w) in enumerate(zip(self.apps, self.workloads)):
             for _ in range(int(alloc.n[i])):

@@ -19,6 +19,20 @@ def test_fleet_latency_model_shape():
         assert np.all(np.diff(d2) < 1e-9), w.name  # more HBM -> faster
 
 
+def test_fleet_latency_model_convex():
+    """d(c, m) stays convex along each resource axis (CRMS needs Thm 2-4)."""
+    from repro.core.fleet import default_workloads, hbm_bounds_gb, request_latency_ms
+
+    for w in default_workloads():
+        r_min, r_max = hbm_bounds_gb(w)
+        chips = np.linspace(1, 64, 32)
+        d = request_latency_ms(w, chips, r_max)
+        assert np.all(d[:-2] + d[2:] - 2 * d[1:-1] >= -1e-9), w.name
+        mems = np.linspace(r_min * 1.001, r_max, 32)
+        d2 = request_latency_ms(w, 8.0, mems)
+        assert np.all(d2[:-2] + d2[2:] - 2 * d2[1:-1] >= -1e-9), w.name
+
+
 def test_fleet_eq1_fit_quality():
     from repro.core.fleet import build_fleet_apps, default_workloads
 
