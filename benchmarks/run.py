@@ -14,6 +14,7 @@ def main() -> None:
         fig15_22_sweeps,
         fleet_tpu,
         mmn_validation,
+        quasidynamic_trace,
         roofline_report,
         solver_throughput,
         table1_fitting,
@@ -29,6 +30,7 @@ def main() -> None:
         fig15_22_sweeps,
         mmn_validation,
         solver_throughput,
+        quasidynamic_trace,
         fleet_tpu,
         roofline_report,
     ):

@@ -1,19 +1,29 @@
-"""Solver-core throughput: one CRMS greedy-refinement iteration at M=8 apps,
-serial `p1_solve` per neighbor vs ONE `engine.p1_solve_batch` over all 2M
-neighbor moves. Gates the batched-engine speedup (≥5×) and records the
-numbers in BENCH_solver.json (repo root).
+"""Solver-core throughput: one CRMS greedy-refinement iteration (all 2M
+neighbor moves in one batched P1 call) across M ∈ {8, 16, 32, 64} tenant
+mixes, isolating the two PR-2 contributions against the PR-1 baseline:
 
-Both paths are warmed first so jit compilation is excluded; parity between
-the two is asserted at 1e-6 relative utility tolerance (the same bound
-tests/test_engine.py pins). The headline speedup is the PR's before/after
-(seed per-neighbor reference solves vs what CRMS refinement now runs); the
-record also isolates `speedup_batching_only` (both sides on the reference
-schedule) so the batching and barrier-schedule contributions stay
-distinguishable — on a 2-core CPU host most of the win is the tuned
-schedule + vectorized phase-1 that the batched architecture enables."""
+  dense      — the PR-1 path: autodiff jax.hessian + O((2M)³) dense solve per
+               Newton step, full-barrier evaluations per line-search trial
+               (engine solver="dense", the parity escape hatch)
+  structured — analytic block-diagonal + Woodbury O(M) Newton direction with
+               the cheap-feasibility line search (solver="structured")
+  seeded     — structured + grid-seeded phase-1 CPU hints from the coarse
+               per-app (c, m) utility sweep (engine.grid_seed_chints; the
+               Pallas kernel on TPU, the jnp oracle on this host) — hint
+               computation is timed inside the loop, so its cost is charged
+               honestly
+
+All paths are warmed first (jit compilation excluded) and cross-checked
+against the reference-schedule solution at 1e-6 relative utility tolerance
+(the bound tests/test_structured_newton.py pins). Per-M records land in
+BENCH_solver.json; the gate requires parity everywhere and a ≥5× structured
+speedup at every measured M (the ISSUE-2 acceptance floor is M=32).
+
+CLI:  python benchmarks/solver_throughput.py [--M 8,16,32,64] [--reps 3]
+"""
 from __future__ import annotations
 
-import dataclasses
+import argparse
 import json
 import time
 from pathlib import Path
@@ -22,23 +32,10 @@ import numpy as np
 
 from benchmarks.common import ALPHA, BETA, emit
 from repro.core.engine import PackedApps, p1_solve_batch
-from repro.core.problem import ServerCaps
-from repro.core.profiler import make_paper_apps
-from repro.core.solvers import p1_solve
+from repro.core.profiler import make_tenant_mix
 
-REPS = 5
 RTOL = 1e-6
-
-
-def make_m8_apps():
-    """M=8 heterogeneous mix: the four §VI apps at the constrained operating
-    point plus a perturbed copy of each (shifted λ, same latency surfaces)."""
-    base = make_paper_apps(lam=(8, 7, 10, 15), fitted=False)
-    extra = [
-        dataclasses.replace(a, name=a.name + "-b", lam=a.lam * f)
-        for a, f in zip(base, (0.75, 1.2, 0.6, 0.5))
-    ]
-    return base + extra
+SPEEDUP_FLOOR = 5.0
 
 
 def refinement_moves(n0: np.ndarray) -> np.ndarray:
@@ -48,78 +45,137 @@ def refinement_moves(n0: np.ndarray) -> np.ndarray:
     ).astype(float)
 
 
-def run() -> bool:
-    apps = make_m8_apps()
+def _time(fn, reps: int) -> float:
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_one(M: int, reps: int) -> dict:
+    apps, caps, n0 = make_tenant_mix(M)
     packed = PackedApps.from_apps(apps)
-    caps = ServerCaps(r_cpu=60.0, r_mem=20.0)
-    # a representative refinement state: feasible, every app above its floor
-    n0 = np.array([7, 8, 3, 7, 5, 9, 2, 4])
     n_cands = refinement_moves(n0)
-    B, M = n_cands.shape
+    B = n_cands.shape[0]
+    # small-M iterations are sub-second and noise-dominated on busy hosts:
+    # take the min over more repetitions there (costs almost nothing)
+    reps = reps if M >= 16 else max(reps, 6)
 
-    # warm-up: compile both paths (and verify the state is solvable).
-    # serial = the seed behavior (reference schedule per neighbor); batched =
-    # what CRMS refinement actually runs (the tuned "refine" schedule).
-    warm = p1_solve(apps, caps, n_cands[0], ALPHA, BETA)
-    assert warm.converged, "benchmark state must be P1-feasible"
-    p1_solve_batch(packed, caps, n_cands, ALPHA, BETA, profile="refine")
-
-    serial_s, batched_s = [], []
-    u_serial = np.full(B, np.inf)
-    for _ in range(REPS):
-        t0 = time.perf_counter()
-        results = [p1_solve(apps, caps, n_cands[b], ALPHA, BETA) for b in range(B)]
-        serial_s.append(time.perf_counter() - t0)
-        u_serial = np.array([r.utility for r in results])
-    for _ in range(REPS):
-        t0 = time.perf_counter()
-        batch = p1_solve_batch(packed, caps, n_cands, ALPHA, BETA, profile="refine")
-        batched_s.append(time.perf_counter() - t0)
-    # isolate the pure-batching contribution (same reference schedule both
-    # sides) so the record can't conflate it with the schedule savings
-    p1_solve_batch(packed, caps, n_cands, ALPHA, BETA)  # warm reference batch
-    batched_ref_s = []
-    for _ in range(REPS):
-        t0 = time.perf_counter()
-        p1_solve_batch(packed, caps, n_cands, ALPHA, BETA)
-        batched_ref_s.append(time.perf_counter() - t0)
-
-    t_serial, t_batched = min(serial_s), min(batched_s)
-    speedup = t_serial / t_batched
-    both = np.isfinite(u_serial) & np.isfinite(batch.utility)
-    agree_mask = np.isfinite(u_serial) == np.isfinite(batch.utility)
-    rel = (
-        float(np.max(np.abs(batch.utility[both] - u_serial[both]) / np.abs(u_serial[both])))
-        if np.any(both)
-        else float("inf")
+    dense = lambda: p1_solve_batch(
+        packed, caps, n_cands, ALPHA, BETA, profile="refine", solver="dense"
     )
-    parity = bool(np.all(agree_mask)) and rel <= RTOL
+    structured = lambda: p1_solve_batch(
+        packed, caps, n_cands, ALPHA, BETA, profile="refine", solver="structured"
+    )
+    seeded = lambda: p1_solve_batch(
+        packed, caps, n_cands, ALPHA, BETA, profile="refine", solver="structured",
+        seed_grid=True,
+    )
 
-    record = {
+    # warm-up (compile) + result capture for the parity check
+    r_dense, r_struct, r_seed = dense(), structured(), seeded()
+    r_ref = p1_solve_batch(packed, caps, n_cands, ALPHA, BETA, solver="structured")
+    assert bool(np.any(r_ref.converged)), f"benchmark state must be P1-feasible at M={M}"
+
+    t_dense = _time(dense, reps)
+    t_struct = _time(structured, reps)
+    t_seed = _time(seeded, reps)
+
+    conv = r_ref.converged
+    # dense/structured share the reference's phase-1 starts: masks must match.
+    # Grid seeds may RESCUE rows whose waterfill phase-1 fails (the hint
+    # fallback guarantees they never lose rows), so the seeded mask must be a
+    # superset of the reference's, with parity checked on the common lanes.
+    masks_ok = (
+        np.array_equal(r_dense.converged, conv)
+        and np.array_equal(r_struct.converged, conv)
+        and bool(np.all(r_seed.converged >= conv))
+    )
+
+    def rel(r):
+        if not np.any(conv):
+            return float("inf")
+        return float(
+            np.max(np.abs(r.utility[conv] - r_ref.utility[conv]) / np.abs(r_ref.utility[conv]))
+        )
+
+    rels = {"dense": rel(r_dense), "structured": rel(r_struct), "seeded": rel(r_seed)}
+    # grid seeding must never worsen the converged utility vs the waterfill
+    seed_no_worse = bool(
+        np.all(r_seed.utility[conv] <= r_struct.utility[conv] * (1.0 + RTOL) + 1e-12)
+    )
+    parity = masks_ok and max(rels.values()) <= RTOL and seed_no_worse
+
+    return {
         "M": int(M),
         "batch": int(B),
-        "reps": REPS,
-        "serial_s": t_serial,
-        "batched_s": t_batched,
-        "batched_reference_schedule_s": min(batched_ref_s),
-        "speedup": speedup,
-        "speedup_batching_only": t_serial / min(batched_ref_s),
-        "n_converged": int(np.sum(np.isfinite(batch.utility))),
-        "max_rel_utility_diff": rel,
+        "reps": int(reps),
+        "n_converged": int(conv.sum()),
+        "dense_s": t_dense,
+        "structured_s": t_struct,
+        "seeded_s": t_seed,
+        "n_seed_rescued": int(np.sum(r_seed.converged & ~conv)),
+        "speedup_structured": t_dense / t_struct,
+        "speedup_total": t_dense / t_seed,
+        "speedup_seeding_only": t_struct / t_seed,
+        "max_rel_utility_diff": rels,
+        "seed_no_worse": seed_no_worse,
         "parity_rtol": RTOL,
         "parity_ok": parity,
     }
-    out = Path(__file__).resolve().parent.parent / "BENCH_solver.json"
-    out.write_text(json.dumps(record, indent=2) + "\n")
 
-    print(
-        f"\nsolver throughput (M={M}, {B} refinement neighbors): "
-        f"serial {t_serial*1e3:.0f}ms vs batched {t_batched*1e3:.0f}ms "
-        f"-> {speedup:.1f}x, max rel ΔU {rel:.2e}"
+
+def run(m_list=(8, 16, 32, 64), reps: int = 3) -> bool:
+    records = []
+    for M in m_list:
+        rec = bench_one(M, reps)
+        records.append(rec)
+        print(
+            f"M={M:3d} (B={rec['batch']}): dense {rec['dense_s']*1e3:7.0f}ms | "
+            f"structured {rec['structured_s']*1e3:6.0f}ms ({rec['speedup_structured']:.1f}x) | "
+            f"+grid-seed {rec['seeded_s']*1e3:6.0f}ms ({rec['speedup_total']:.1f}x total, "
+            f"{rec['speedup_seeding_only']:.2f}x from seeding) | "
+            f"parity {'OK' if rec['parity_ok'] else 'FAIL'}"
+        )
+
+    ok = all(r["parity_ok"] for r in records) and all(
+        r["speedup_structured"] >= SPEEDUP_FLOOR for r in records
     )
-    emit("solver_throughput", t_batched * 1e6, f"speedup={speedup:.1f}x;parity={parity}")
-    return speedup >= 5.0 and parity
+    out = Path(__file__).resolve().parent.parent / "BENCH_solver.json"
+    out.write_text(
+        json.dumps(
+            {
+                "speedup_floor": SPEEDUP_FLOOR,
+                "parity_rtol": RTOL,
+                "ok": ok,
+                "per_M": records,
+            },
+            indent=2,
+        )
+        + "\n"
+    )
+    worst = min(records, key=lambda r: r["speedup_structured"])
+    emit(
+        "solver_throughput",
+        worst["structured_s"] * 1e6,
+        f"min_speedup={worst['speedup_structured']:.1f}x@M{worst['M']};ok={ok}",
+    )
+    return ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--M", default="8,16,32,64",
+        help="comma-separated app-mix sizes to sweep (multiples of 4)",
+    )
+    ap.add_argument("--reps", type=int, default=3, help="timing repetitions (min taken)")
+    args = ap.parse_args()
+    m_list = tuple(int(s) for s in args.M.split(","))
+    return 0 if run(m_list, args.reps) else 1
 
 
 if __name__ == "__main__":
-    raise SystemExit(0 if run() else 1)
+    raise SystemExit(main())

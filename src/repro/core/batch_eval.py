@@ -75,6 +75,28 @@ def utility_batch(
     return u, ws, feas & stable
 
 
+@jax.jit
+def utility_terms_batch(
+    packed: dict,
+    n: jnp.ndarray,  # (B, M) float
+    c: jnp.ndarray,  # (B, M)
+    m: jnp.ndarray,  # (B, M)
+    caps_cpu: float,
+    power_span: float,
+    alpha: float,
+    beta: float,
+):
+    """Per-app utility terms (B, M) of Eq. (8): α·Ws_i + β·ΔP_i/λ_i, with
+    unstable apps mapped to +inf. The interpret-mode/CPU fallback oracle for
+    the Pallas grid kernel's per-app output (engine.grid_seed_chints) — the
+    per-app view of ``utility_batch``'s summed objective."""
+    _, ws, _ = utility_batch(
+        packed, n, c, m, caps_cpu, jnp.inf, power_span, alpha, beta, hard=True
+    )
+    dp = power_span * n * c / caps_cpu
+    return alpha * ws + beta * dp / packed["lam"]
+
+
 def evaluate_candidates(apps, caps: ServerCaps, n, c, m, alpha, beta, hard=True):
     """NumPy-friendly wrapper. ``apps`` may be a Sequence[App] or an
     already-built engine.PackedApps (pack once, evaluate many)."""

@@ -88,6 +88,8 @@ def crms(
     solver=None,
     warm: Allocation | None = None,
     packed=None,
+    newton: str = "structured",
+    grid_seed: bool = True,
 ) -> Allocation:
     """Paper Algorithm 2 (CRMS). Returns the final feasible Allocation.
 
@@ -99,6 +101,12 @@ def crms(
     from the cached container counts.
     ``packed``: optional engine.PackedApps for ``apps`` built by the caller
     (e.g. the fleet binding packs once per observation epoch).
+    ``newton``: Newton direction of the batched engine — "structured" (O(M)
+    analytic default) or "dense" (the autodiff escape hatch).
+    ``grid_seed``: seed each refinement batch's phase-1 CPU hints from the
+    coarse (c, m) utility grid sweep (engine.grid_seed_chints — the Pallas
+    kernel on TPU, the jnp oracle elsewhere) instead of reusing the scalar
+    SP1/warm hints for every neighbor.
     """
     packed = packed if packed is not None else as_packed(apps)
     M = len(apps)
@@ -108,7 +116,7 @@ def crms(
             return solver(apps, caps, n_vec, alpha, beta, c_hint=c_hint)
         return p1_solve_batch(
             packed, caps, np.asarray(n_vec, dtype=float)[None, :], alpha, beta,
-            c_hint=c_hint,
+            c_hint=c_hint, solver=newton,
         ).row(0)
 
     history = []
@@ -208,9 +216,13 @@ def crms(
         else:
             n_cands = np.stack([n + delta * np.eye(M, dtype=int)[i] for i, delta in moves])
             # the tuned "refine" barrier schedule: ~7x less Newton work per
-            # neighbor at ≤2e-9 relative utility drift (engine.P1_PROFILES)
+            # neighbor at ≤2e-9 relative utility drift (engine.P1_PROFILES).
+            # seed_grid puts grid-argmin hints first; the SP1/warm c_hint and
+            # the waterfill stay in the fallback chain, so seeding never
+            # shrinks the explorable move set
             batch = p1_solve_batch(
-                packed, caps, n_cands, alpha, beta, c_hint=c_hint, profile="refine"
+                packed, caps, n_cands, alpha, beta, c_hint=c_hint, profile="refine",
+                solver=newton, seed_grid=grid_seed,
             )
             u_cand, _, _ = evaluate_candidates(
                 packed, caps, n_cands.astype(float), batch.r_cpu, batch.r_mem,
@@ -252,11 +264,21 @@ class QuasiDynamicAllocator:
     app mix changes. Re-optimizations for an unchanged mix warm-start from the
     cached allocation (container counts + quota hints), skipping Algorithm 1."""
 
-    def __init__(self, caps: ServerCaps, alpha: float, beta: float, threshold: float = 0.15):
+    def __init__(
+        self,
+        caps: ServerCaps,
+        alpha: float,
+        beta: float,
+        threshold: float = 0.15,
+        newton: str = "structured",
+        grid_seed: bool = True,
+    ):
         self.caps = caps
         self.alpha = alpha
         self.beta = beta
         self.threshold = threshold
+        self.newton = newton
+        self.grid_seed = grid_seed
         self._lam = None
         self._names = None
         self._alloc: Allocation | None = None
@@ -274,7 +296,10 @@ class QuasiDynamicAllocator:
         if self.should_reoptimize(apps):
             names = tuple(a.name for a in apps)
             warm = self._alloc if names == self._names else None
-            self._alloc = crms(apps, self.caps, self.alpha, self.beta, warm=warm, packed=packed)
+            self._alloc = crms(
+                apps, self.caps, self.alpha, self.beta, warm=warm, packed=packed,
+                newton=self.newton, grid_seed=self.grid_seed,
+            )
             self._lam = np.array([a.lam for a in apps])
             self._names = names
             self.reoptimizations += 1

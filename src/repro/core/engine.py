@@ -108,11 +108,13 @@ def p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
     return jnp.sum(alpha * ws + beta * dp / packed["lam"])
 
 
-def p1_barrier(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
+def p1_slacks(x, packed, n, caps_cpu, caps_mem):
+    """The barrier constraint slacks (budgets, memory box, CPU floor) — the
+    single definition shared by the barrier value and the line search's cheap
+    feasibility check, so the two cannot drift."""
     M = packed["lam"].shape[0]
     c, m = x[:M], x[M:]
-    f = p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta)
-    slacks = jnp.concatenate(
+    return jnp.concatenate(
         [
             jnp.asarray([caps_cpu - jnp.sum(n * c), caps_mem - jnp.sum(n * m)]),
             m - packed["r_min"],
@@ -120,6 +122,11 @@ def p1_barrier(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
             c - packed["cpu_min"],
         ]
     )
+
+
+def p1_barrier(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
+    f = p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta)
+    slacks = p1_slacks(x, packed, n, caps_cpu, caps_mem)
     barrier = -jnp.sum(jnp.log(slacks))
     return t * f + barrier, slacks
 
@@ -134,17 +141,129 @@ def p1_rho(x, packed, n):
     return packed["lam"] / (n * mu)
 
 
-def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer, n_inner):
+_NEWTON_DAMP = 1e-9  # diagonal damping shared by the dense and structured paths
+
+
+def _newton_direction_structured(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
+    """Analytic Newton direction H⁻¹g for the P1 barrier in O(M).
+
+    The barrier Hessian has exploitable structure (DESIGN.md §5): the
+    objective and all box barriers are separable per app — each (c_i, m_i)
+    pair contributes one 2×2 block — and only the two budget barriers couple
+    apps, each as a rank-1 term (1/s²)·nnᵀ on its own resource block. So
+
+        H = B + uuᵀ + vvᵀ,   B block-diagonal (2×2), u = [n/s_cpu; 0],
+                             v = [0; n/s_mem]
+
+    and H⁻¹g follows from per-app 2×2 solves plus a 2×2 Woodbury
+    (Sherman-Morrison-Woodbury) capacitance solve — no O((2M)³) dense
+    factorization and no forward-over-reverse autodiff Hessian. All
+    derivatives are closed-form: Eq. (1) latency, mu = 1000/(x̄ d), Erlang-C
+    Ws via queueing.erlang_ws_derivs, the linear power term and the log
+    barriers. With the same _NEWTON_DAMP on the block diagonals this is the
+    exact same damped-Hessian solve as the dense path.
+    """
+    M = packed["lam"].shape[0]
+    c, m = x[:M], x[M:]
+    k1, k2, k3 = packed["kappa"][:, 0], packed["kappa"][:, 1], packed["kappa"][:, 2]
+    lam, xbar = packed["lam"], packed["xbar"]
+
+    # Eq. (1): d = k1/(1-e^{-k2 c}) + e^{k3/m}, separable so d_cm = 0
+    e = jnp.exp(-k2 * c)
+    s = 1.0 - e
+    B_m = jnp.exp(k3 / m)
+    d = k1 / s + B_m
+    d_c = -k1 * k2 * e / s**2
+    d_cc = k1 * k2**2 * e * (s + 2.0 * e) / s**3
+    d_m = -(k3 / m**2) * B_m
+    d_mm = B_m * (k3**2 / m**4 + 2.0 * k3 / m**3)
+
+    # mu = K/d with K = 1000/x̄ (Eq. 6)
+    K = 1000.0 / xbar
+    mu = K / d
+    mu_c = -K * d_c / d**2
+    mu_m = -K * d_m / d**2
+    mu_cc = K * (2.0 * d_c**2 / d**3 - d_cc / d**2)
+    mu_mm = K * (2.0 * d_m**2 / d**3 - d_mm / d**2)
+    mu_cm = 2.0 * K * d_c * d_m / d**3
+
+    _, ws1, ws2 = jax.vmap(queueing.erlang_ws_derivs)(n, lam, mu)
+    P = beta * power_span * n / (caps_cpu * lam)  # linear power slope in c
+
+    f_c = alpha * ws1 * mu_c + P
+    f_m = alpha * ws1 * mu_m
+    f_cc = alpha * (ws2 * mu_c**2 + ws1 * mu_cc)
+    f_cm = alpha * (ws2 * mu_c * mu_m + ws1 * mu_cm)
+    f_mm = alpha * (ws2 * mu_m**2 + ws1 * mu_mm)
+
+    s_cpu = caps_cpu - jnp.sum(n * c)
+    s_mem = caps_mem - jnp.sum(n * m)
+    sc_lo = c - packed["cpu_min"]
+    sm_lo = m - packed["r_min"]
+    sm_hi = packed["r_max"] - m
+
+    g_c = t * f_c + n / s_cpu - 1.0 / sc_lo
+    g_m = t * f_m + n / s_mem - 1.0 / sm_lo + 1.0 / sm_hi
+
+    bcc = t * f_cc + 1.0 / sc_lo**2 + _NEWTON_DAMP
+    bmm = t * f_mm + 1.0 / sm_lo**2 + 1.0 / sm_hi**2 + _NEWTON_DAMP
+    bcm = t * f_cm
+    det = bcc * bmm - bcm**2
+
+    def bsolve(rc, rm):  # per-app 2×2 solve B_i y_i = r_i, vectorized over apps
+        return (bmm * rc - bcm * rm) / det, (bcc * rm - bcm * rc) / det
+
+    u = n / s_cpu  # rank-1 factors of the two budget-barrier Hessians
+    v = n / s_mem
+    yg_c, yg_m = bsolve(g_c, g_m)
+    yu_c, yu_m = bsolve(u, jnp.zeros_like(u))
+    yv_c, yv_m = bsolve(jnp.zeros_like(v), v)
+
+    # 2×2 capacitance solve: (I + Uᵀ B⁻¹ U) w = Uᵀ B⁻¹ g, U = [u | v]
+    S11 = 1.0 + jnp.dot(u, yu_c)
+    S12 = jnp.dot(u, yv_c)
+    S21 = jnp.dot(v, yu_m)
+    S22 = 1.0 + jnp.dot(v, yv_m)
+    bu = jnp.dot(u, yg_c)
+    bv = jnp.dot(v, yg_m)
+    detS = S11 * S22 - S12 * S21
+    w1 = (S22 * bu - S12 * bv) / detS
+    w2 = (S11 * bv - S21 * bu) / detS
+    dx_c = yg_c - (yu_c * w1 + yv_c * w2)
+    dx_m = yg_m - (yu_m * w1 + yv_m * w2)
+    return jnp.concatenate([dx_c, dx_m])
+
+
+def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer, n_inner,
+             solver: str = "structured", t0: float = 1.0):
     """Log-barrier interior point: t <- t*mu_t, damped Newton inner loop with a
     feasibility-preserving backtracking line search (rejects steps that leave
-    the barrier domain or the queue-stability region)."""
+    the barrier domain or the queue-stability region).
+
+    ``solver`` picks the Newton direction: "structured" (default) is the
+    analytic block-diagonal + Woodbury O(M) solve; "dense" is the autodiff
+    jax.hessian + O((2M)³) jnp.linalg.solve escape hatch kept for parity
+    testing (tests/test_structured_newton.py pins the two within 1e-6)."""
 
     def strictly_feasible(x):
         _, slacks = p1_barrier(x, 1.0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta)
         rho = p1_rho(x, packed, n)
         return jnp.logical_and(jnp.all(slacks > 0), jnp.all(rho < 1.0 - 1e-7))
 
-    def inner(x, t):
+    def feasible_cheap(x):
+        # same predicate as strictly_feasible without evaluating the objective:
+        # slacks are linear/box terms, rho needs only the Eq. (1) latency
+        slacks = p1_slacks(x, packed, n, caps_cpu, caps_mem)
+        rho = p1_rho(x, packed, n)
+        return jnp.logical_and(jnp.all(slacks > 0), jnp.all(rho < 1.0 - 1e-7))
+
+    _ALPHAS = (1.0, 0.5, 0.25, 0.1, 0.03, 0.01, 3e-3, 1e-3)
+
+    def inner_dense(x, t):
+        # the PR-1 newton step, verbatim: autodiff Hessian, dense solve, and a
+        # line search paying a full barrier evaluation per trial step — the
+        # escape hatch the structured path is parity-tested and benchmarked
+        # against
         def newton_step(x, _):
             val_fn = lambda xx: p1_barrier(
                 xx, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta
@@ -152,7 +271,7 @@ def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer
             g = jax.grad(val_fn)(x)
             H = jax.hessian(val_fn)(x)
             dim = x.shape[0]
-            H = H + 1e-9 * jnp.eye(dim, dtype=x.dtype)
+            H = H + _NEWTON_DAMP * jnp.eye(dim, dtype=x.dtype)
             dx = jnp.linalg.solve(H, g)
             cur = val_fn(x)
 
@@ -167,32 +286,85 @@ def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer
                 found = jnp.logical_or(found, better)
                 return (best_x, best_val, found), None
 
-            alphas = jnp.asarray([1.0, 0.5, 0.25, 0.1, 0.03, 0.01, 3e-3, 1e-3], x.dtype)
+            alphas = jnp.asarray(_ALPHAS, x.dtype)
             (x_new, _, found), _ = jax.lax.scan(try_alpha, (x, cur, jnp.asarray(False)), alphas)
             return jnp.where(found, x_new, x), None
 
         x, _ = jax.lax.scan(newton_step, x, None, length=n_inner)
         return x
 
+    def inner_structured(x, t):
+        # analytic O(M) direction + a two-stage line search with the SAME
+        # acceptance rule as inner_dense (largest alpha that is strictly
+        # feasible and decreases the barrier): feasibility of all trial
+        # alphas is prechecked without touching the objective (the feasible
+        # set is convex, so feasibility is monotone in the step size), then
+        # barrier values are evaluated on demand, largest-first, stopping at
+        # the first improvement — 1-2 heavy evaluations per step instead of
+        # 2 per trial alpha
+        val_fn = lambda xx: p1_barrier(
+            xx, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta
+        )[0]
+
+        def newton_step(carry, _):
+            # the barrier value at x rides the carry: the accepted candidate's
+            # value IS the next step's baseline, so each step costs one heavy
+            # evaluation per tried alpha and none for the current point
+            x, cur = carry
+            dx = _newton_direction_structured(
+                x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta
+            )
+            alphas = jnp.asarray(_ALPHAS, x.dtype)
+            feas = jax.vmap(lambda a: feasible_cheap(x - a * dx))(alphas)
+            k = alphas.shape[0]
+            start = jnp.where(jnp.any(feas), jnp.argmax(feas), k)
+
+            def cond(state):
+                i, accepted, _, _ = state
+                return jnp.logical_and(~accepted, i < k)
+
+            def body(state):
+                i, _, xb, vb = state
+                cand = x - alphas[i] * dx
+                v = jnp.where(feas[i], val_fn(cand), jnp.inf)
+                acc = v < cur
+                return (
+                    i + 1,
+                    acc,
+                    jnp.where(acc, cand, xb),
+                    jnp.where(acc, v, vb),
+                )
+
+            _, _, x_new, cur_new = jax.lax.while_loop(
+                cond, body, (start, jnp.asarray(False), x, cur)
+            )
+            return (x_new, cur_new), None
+
+        (x, _), _ = jax.lax.scan(newton_step, (x, val_fn(x)), None, length=n_inner)
+        return x
+
+    inner = inner_structured if solver == "structured" else inner_dense
+
     def outer(carry, _):
         x, t = carry
         x = inner(x, t)
         return (x, t * 6.0), None
 
-    (x, _), _ = jax.lax.scan(outer, (x0, jnp.asarray(1.0, x0.dtype)), None, length=n_outer)
+    (x, _), _ = jax.lax.scan(outer, (x0, jnp.asarray(t0, x0.dtype)), None, length=n_outer)
     return x
 
 
-@partial(jax.jit, static_argnames=("n_outer", "n_inner"))
+@partial(jax.jit, static_argnames=("n_outer", "n_inner", "solver", "t0"))
 def _ip_solve_batched(
     x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta,
-    n_outer=14, n_inner=24,
+    n_outer=14, n_inner=24, solver="structured", t0=1.0,
 ):
     """One jitted vmap over a (B, 2M) batch of starts + (B, M) counts. Returns
     (x* (B, 2M), utility (B,))."""
 
     def one(x0_i, n_i):
-        x = _ip_core(x0_i, packed, n_i, caps_cpu, caps_mem, power_span, alpha, beta, n_outer, n_inner)
+        x = _ip_core(x0_i, packed, n_i, caps_cpu, caps_mem, power_span, alpha, beta,
+                     n_outer, n_inner, solver=solver, t0=t0)
         u = p1_objective(x, packed, n_i, caps_cpu, caps_mem, power_span, alpha, beta)
         return x, u
 
@@ -258,8 +430,13 @@ def find_feasible_start_batch(packed, caps: ServerCaps, n_batch, c_hint=None):
         )
         m0 = m_bare + phi2[:, None] * (m_pref - m_bare)
 
-        # stability repair: each app needs d(c, m0) < N/(λ x̄) * 1000 ms
-        for _ in range(40):
+        # stability repair: each app needs d(c, m0) < N/(λ x̄) * 1000 ms.
+        # Typical rows settle in 1-3 rounds; genuinely borderline rows can
+        # oscillate between the lift and the budget shrink, so the round
+        # budget is tight and survivors are masked by the hard-cap check
+        # below instead of burning 40 vectorized-bisection rounds (this loop
+        # sits on the per-refinement-iteration hot path)
+        for _ in range(12):
             d_now = _eq1_np(packed.kappa, c0, m0)
             bad = d_now >= d_cap_ms  # (B, M)
             active = np.any(bad, axis=1)  # rows still being repaired
@@ -271,7 +448,7 @@ def find_feasible_start_batch(packed, caps: ServerCaps, n_batch, c_hint=None):
             # (B, M) lanes at once — non-bad lanes are discarded by the mask
             lo = np.broadcast_to(cpu_min, (B, M)).copy()
             hi = np.broadcast_to(packed.cpu_max, (B, M)).copy()
-            for _ in range(60):
+            for _ in range(44):  # 8 cores / 2^44 ≈ 5e-13 — still fp-exact
                 mid = 0.5 * (lo + hi)
                 too_slow = _eq1_np(packed.kappa, mid, m0) >= d_cap_ms
                 lo = np.where(too_slow, mid, lo)
@@ -292,8 +469,116 @@ def find_feasible_start_batch(packed, caps: ServerCaps, n_batch, c_hint=None):
                 c0,
             )
 
+        # rows whose repair budget ran out with still-unstable lanes (rho >=
+        # 1, i.e. d at/above the hard cap, not just the 0.92 repair target)
+        # never reached a strictly feasible interior point — mask them instead
+        # of handing the solver a start outside the barrier domain
+        d_hard_ms = d_cap_ms / 0.92
+        ok &= ~np.any(
+            _eq1_np(packed.kappa, c0, m0) >= d_hard_ms * (1.0 - 1e-7), axis=1
+        )
+
     x0 = np.concatenate([c0, m0], axis=1)
     return x0, ok
+
+
+# ----------------------------------------------------------------------------
+# Grid-seeded phase-1 CPU hints (ROADMAP: Pallas grid seeding)
+# ----------------------------------------------------------------------------
+def grid_seed_chints(
+    packed,
+    caps: ServerCaps,
+    n_batch,
+    alpha: float,
+    beta: float,
+    n_c: int = 6,
+    n_m: int = 3,
+    backend: str | None = None,
+) -> np.ndarray:
+    """Coarse per-app (c, m) utility sweep per candidate count vector; returns
+    the argmin-cell CPU quotas as (B, M) phase-1 ``c_hint``s.
+
+    Each app gets a log-spaced CPU grid × linear memory grid over its own box;
+    grid cell g assigns every app its g-th quota simultaneously, so the
+    per-app utility terms of one batched evaluation decouple and a single
+    argmin over G recovers each app's grid-optimal cell at its actual
+    container count. The global budget coupling is deliberately ignored here —
+    ``find_feasible_start_batch`` scales the hint into the budget, exactly as
+    it does the SP1 ideal-config hints.
+
+    ``backend``: None/'auto' routes through the Pallas kernel on TPU
+    (kernels.ops.crms_grid, per-app mode) and the f64 jnp oracle
+    (batch_eval.utility_terms_batch) elsewhere; 'pallas'/'interpret'/
+    'reference' force the kernel path, 'oracle' forces the jnp oracle.
+    Apps with no stable grid cell fall back to cpu_max (the most
+    stabilizing quota the box allows).
+    """
+    packed = as_packed(packed)
+    n = np.asarray(n_batch, dtype=float)
+    B, M = n.shape
+
+    # Per-app terms depend on the app's own count only, so the sweep needs the
+    # per-COLUMN unique counts, not all B rows: a CRMS refinement batch has at
+    # most 3 distinct counts per app (n0, n0±1), collapsing the (B·G, M)
+    # candidate matrix to (K·G, M) with K = max distinct counts per app.
+    uniq = [np.unique(n[:, i]) for i in range(M)]
+    K = max(u.shape[0] for u in uniq)
+    Kp = _pad_pow2(K)  # keep the jit cache warm as the CRMS move set shrinks
+    V = np.stack(  # (Kp, M) pseudo-rows; short columns repeat their last count
+        [np.concatenate([u, np.full(Kp - u.shape[0], u[-1])]) for u in uniq], axis=1
+    )
+    # row index of each (b, i)'s count among its column's unique values
+    kidx = np.stack([np.searchsorted(u, n[:, i]) for i, u in enumerate(uniq)], axis=1)
+
+    cgrid = np.geomspace(packed.cpu_min * 1.25 + 1e-3, packed.cpu_max, n_c)  # (n_c, M)
+    span = packed.r_max - packed.r_min
+    mgrid = np.linspace(packed.r_min + 0.02 * span, packed.r_max, n_m)  # (n_m, M)
+    cg = np.repeat(cgrid, n_m, axis=0)  # (G, M) cell -> cpu quota
+    mg = np.tile(mgrid, (n_c, 1))  # (G, M) cell -> mem quota
+    G = n_c * n_m
+
+    n_rep = np.repeat(V, G, axis=0)  # (Kp*G, M)
+    c_rep = np.tile(cg, (Kp, 1))
+    m_rep = np.tile(mg, (Kp, 1))
+
+    use_oracle = backend == "oracle" or (
+        backend in (None, "auto") and jax.default_backend() != "tpu"
+    )
+    if use_oracle:
+        from repro.core.batch_eval import utility_terms_batch
+
+        terms = utility_terms_batch(
+            packed.as_dict(),
+            jnp.asarray(n_rep),
+            jnp.asarray(c_rep),
+            jnp.asarray(m_rep),
+            jnp.asarray(float(caps.r_cpu)),
+            jnp.asarray(float(caps.power.span)),
+            float(alpha),
+            float(beta),
+        )
+    else:
+        from repro.kernels import ops
+
+        terms = ops.crms_grid(
+            packed.kappa, packed.lam, packed.xbar, n_rep, c_rep, m_rep,
+            caps_cpu=float(caps.r_cpu), power_span=float(caps.power.span),
+            alpha=float(alpha), beta=float(beta),
+            backend=backend or "auto", reduce="per_app",
+        )
+    terms = np.asarray(terms, dtype=float).reshape(Kp, G, M)
+    # unstable cells: +inf from the f64 oracle, the ws=1e9 sentinel from the
+    # f32 Pallas kernel (emitted as alpha·1e9 + power term) — map both to inf
+    # so argmin/fallback agree across backends; the threshold scales with
+    # alpha so small latency weights don't slip the sentinel past the filter
+    thresh = max(float(alpha), 1e-3) * 1e8
+    terms = np.where(np.isfinite(terms) & (terms < thresh), terms, np.inf)
+    gstar = np.argmin(terms, axis=1)  # (Kp, M) argmin cell per (count, app)
+    cols = np.arange(M)
+    c_hint_k = cg[gstar, cols[None, :]]  # (Kp, M)
+    no_stable_cell = ~np.isfinite(np.min(terms, axis=1))
+    c_hint_k = np.where(no_stable_cell, packed.cpu_max[None, :], c_hint_k)
+    return c_hint_k[kidx, cols[None, :]]  # scatter back to the (B, M) batch
 
 
 # ----------------------------------------------------------------------------
@@ -357,6 +642,8 @@ def p1_solve_batch(
     n_inner: int | None = None,
     pad: bool = True,
     profile: str = "reference",
+    solver: str = "structured",
+    seed_grid: bool = False,
 ) -> P1BatchResult:
     """Solve Problem P1 (Eq. 26) for every row of a (B, M) batch of container
     counts in ONE vmapped interior-point call.
@@ -368,6 +655,12 @@ def p1_solve_batch(
     rounds B up to a power of two so the jit cache stays warm as the CRMS
     move set shrinks between refinement iterations. ``profile`` picks the
     barrier schedule (see P1_PROFILES); explicit n_outer/n_inner override it.
+    ``solver`` picks the Newton direction ("structured" O(M) analytic default,
+    "dense" autodiff escape hatch). ``seed_grid`` puts phase-1 CPU hints from
+    the coarse per-app (c, m) utility grid sweep (grid_seed_chints) at the
+    head of the hint chain; rows where a hinted phase-1 fails fall back to
+    the caller's ``c_hint`` and finally the plain waterfill, so hint sources
+    only ever add feasible rows.
     """
     prof_outer, prof_inner = P1_PROFILES[profile]
     n_outer = prof_outer if n_outer is None else n_outer
@@ -377,7 +670,27 @@ def p1_solve_batch(
     if n_np.ndim != 2:
         raise ValueError(f"n_batch must be (B, M), got shape {n_np.shape}")
     B, M = n_np.shape
-    x0, ok = find_feasible_start_batch(packed, caps, n_np, c_hint=c_hint)
+    # Phase-1 hint chain: grid-seeded cells first (when enabled), then the
+    # caller's hint (SP1 ideal / warm quotas), then the plain waterfill.
+    # Hints are advisory — rows where a hinted phase-1 fails (e.g. a
+    # budget-oblivious hint starves a CPU-hungry app) retry down the chain,
+    # so adding a hint source can only ever ADD feasible rows, and each
+    # retry touches only the still-failing row subset.
+    hint_chain: list = [c_hint] if c_hint is not None else []
+    if seed_grid:
+        hint_chain.insert(0, grid_seed_chints(packed, caps, n_np, alpha, beta))
+    if not hint_chain or hint_chain[-1] is not None:
+        hint_chain.append(None)
+    x0, ok = find_feasible_start_batch(packed, caps, n_np, c_hint=hint_chain[0])
+    for fb in hint_chain[1:]:
+        if np.all(ok):
+            break
+        idx = np.where(~ok)[0]
+        fb_np = np.asarray(fb, dtype=float) if fb is not None else None
+        sub = fb_np[idx] if fb_np is not None and fb_np.ndim == 2 else fb_np
+        x0_fb, ok_fb = find_feasible_start_batch(packed, caps, n_np[idx], c_hint=sub)
+        x0[idx[ok_fb]] = x0_fb[ok_fb]
+        ok[idx[ok_fb]] = True
 
     r_cpu = np.zeros((B, M))
     r_mem = np.broadcast_to(packed.r_min, (B, M)).copy()
@@ -407,6 +720,7 @@ def p1_solve_batch(
         float(beta),
         n_outer=n_outer,
         n_inner=n_inner,
+        solver=solver,
     )
     x = np.asarray(x)[:B]
     u = np.asarray(u)[:B]

@@ -150,6 +150,28 @@ def build_fleet_engine(
     return apps, PackedApps.from_apps(apps), pod_caps(n_chips)
 
 
+def fleet_allocator(
+    workloads: Sequence[WorkloadCost] | None = None,
+    n_chips: int = 256,
+    alpha: float = 1.4,
+    beta: float = 0.2,
+    threshold: float = 0.15,
+    seed: int = 0,
+    newton: str = "structured",
+    grid_seed: bool = True,
+):
+    """Fleet binding + a ready quasi-dynamic allocator wired to the structured
+    O(M) Newton path and grid-seeded phase-1 (the production defaults of the
+    pod binding). Returns (apps, packed, caps, allocator)."""
+    from repro.core.crms import QuasiDynamicAllocator
+
+    apps, packed, caps = build_fleet_engine(workloads, n_chips=n_chips, seed=seed)
+    allocator = QuasiDynamicAllocator(
+        caps, alpha, beta, threshold, newton=newton, grid_seed=grid_seed
+    )
+    return apps, packed, caps, allocator
+
+
 def pod_caps(n_chips: int = 256) -> ServerCaps:
     return ServerCaps(
         r_cpu=float(n_chips),

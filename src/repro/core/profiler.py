@@ -128,3 +128,31 @@ def make_paper_apps(
             )
         )
     return apps
+
+
+def make_tenant_mix(M: int, lam: Sequence[float] = (8.0, 7.0, 10.0, 15.0)):
+    """An M-app heterogeneous tenant mix for solver scaling work (M a multiple
+    of 4): the four §VI apps tiled with cycled λ perturbation factors, plus
+    server caps and a representative constrained refinement state n0, both
+    scaled with the tile count. The M=8 instance matches the historical
+    solver-throughput benchmark mix (base apps + one perturbed copy of each).
+    Returns (apps, caps, n0)."""
+    import dataclasses as _dc
+
+    from repro.core.problem import ServerCaps
+
+    if M % 4 != 0 or M < 4:
+        raise ValueError(f"M must be a positive multiple of 4, got {M}")
+    base = make_paper_apps(lam=lam, fitted=False)
+    factors = (1.0, 1.0, 1.0, 1.0, 0.75, 1.2, 0.6, 0.5, 0.9, 1.1, 0.8, 0.65)
+    apps = []
+    for t in range(M // 4):
+        for j, a in enumerate(base):
+            i = t * 4 + j
+            f = factors[i % len(factors)]
+            name = a.name if t == 0 else f"{a.name}-{t}"
+            apps.append(_dc.replace(a, name=name, lam=a.lam * f))
+    reps = M // 4
+    caps = ServerCaps(r_cpu=30.0 * reps, r_mem=10.0 * reps)
+    n0 = np.tile([7, 8, 3, 7], reps)
+    return apps, caps, n0.astype(int)

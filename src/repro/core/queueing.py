@@ -86,6 +86,54 @@ def erlang_ws(N, lam, mu):
     return erlang_ls(N, lam, mu) / lam
 
 
+def erlang_ws_derivs(N, lam, mu):
+    """Closed-form (Ws, dWs/dmu, d²Ws/dmu²) on the stable region, for the
+    structured Newton path of the P1 solver (engine._newton_direction_structured).
+
+    Uses the Erlang-C identity Lq = C·rho/(1-rho) with C the probability of
+    waiting (log-space, same head/tail forms as ``erlang_ws``), and the exact
+    a-derivatives
+
+        dC/da  = C·[(1-rho)/rho + (1-C)/(N(1-rho))]
+        dLq/da = C'·rho/(1-rho) + C/(N(1-rho)²)
+
+    (valid for integer N, where d/da Σ_{k<N} a^k/k! = Σ_{k<N-1} a^k/k!),
+    then chains through a = lam/mu. Ws = Lq/lam + 1/mu. Matches
+    jax.grad/jax.hessian of ``erlang_ws`` to fp precision on the stable
+    region (pinned by tests/test_structured_newton.py); unstable inputs
+    (rho >= 1) return +inf value with unspecified derivatives.
+    """
+    dtype = jnp.result_type(float)
+    N = jnp.asarray(N, dtype=dtype)
+    lam = jnp.asarray(lam, dtype=dtype)
+    mu = jnp.asarray(mu, dtype=dtype)
+    a = lam / mu
+    rho = a / N
+    rho_s = jnp.minimum(rho, 1.0 - 1e-9)
+    one_m = 1.0 - rho_s  # (1 - rho), the only small quantity here
+    log_a = jnp.log(lam) - jnp.log(mu)
+    log_head = _log_sum_k(N, log_a)
+    log_tail = N * log_a - gammaln(N + 1.0) - jnp.log(one_m)
+    C = jnp.exp(log_tail - jnp.logaddexp(log_head, log_tail))
+
+    lq = C * rho_s / one_m
+    # first derivatives w.r.t. a
+    h = one_m / rho_s + (1.0 - C) / (N * one_m)
+    dC = C * h
+    dlq = dC * rho_s / one_m + C / (N * one_m**2)
+    # second derivatives w.r.t. a
+    dh = -N / a**2 + (-dC * one_m + (1.0 - C) / N) / (N * one_m**2)
+    d2C = dC * h + C * dh
+    d2lq = d2C * rho_s / one_m + 2.0 * dC / (N * one_m**2) + 2.0 * C / (N**2 * one_m**3)
+
+    # chain rule through a(mu) = lam/mu:  da/dmu = -a/mu, d²a/dmu² = 2a/mu²
+    ws = lq / lam + 1.0 / mu
+    dws = -dlq * a / (mu * lam) - 1.0 / mu**2
+    d2ws = (d2lq * (a / mu) ** 2 + dlq * 2.0 * a / mu**2) / lam + 2.0 / mu**3
+    ws = jnp.where(rho < 1.0, ws, jnp.inf)
+    return ws, dws, d2ws
+
+
 def erlang_ws_finite(N, lam, mu, cap: float = 1e9):
     """Ws with the unstable branch mapped to a large finite cap (for optimizers
     that dislike inf, e.g. line searches probing the boundary)."""

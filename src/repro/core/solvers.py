@@ -30,6 +30,7 @@ from repro.core.engine import (  # noqa: F401 — re-exported solver surface
     PackedApps,
     as_packed,
     find_feasible_start_batch,
+    grid_seed_chints,
     p1_objective,
     p1_solve_batch,
 )
@@ -148,12 +149,17 @@ def p1_solve(
     alpha: float,
     beta: float,
     c_hint=None,
+    solver: str = "structured",
+    seed_grid: bool = False,
 ) -> P1Result:
     """Solve Problem P1 (Eq. 26) with N fixed. JAX interior-point primary path
-    — the B=1 case of the batched engine."""
+    — the B=1 case of the batched engine. ``solver`` picks the Newton
+    direction ("structured" O(M) analytic / "dense" autodiff escape hatch);
+    ``seed_grid`` derives the phase-1 CPU hint from the coarse utility grid
+    sweep when no ``c_hint`` is given."""
     batch = p1_solve_batch(
         as_packed(apps), caps, np.asarray(n, dtype=float)[None, :], alpha, beta,
-        c_hint=c_hint,
+        c_hint=c_hint, solver=solver, seed_grid=seed_grid,
     )
     return batch.row(0)
 

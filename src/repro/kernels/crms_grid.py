@@ -2,11 +2,18 @@
 of Problem-P candidate allocations (Eq.(1) latency -> service rate -> Erlang-C
 Ws -> utility). RS/GPBO/TPEBO score tens of thousands of candidates per
 optimization cycle; each costs an O(MAX_N) masked log-sum per app for pi0.
+CRMS phase-1 grid seeding (engine.grid_seed_chints) sweeps coarse (c, m)
+quota grids through the same kernel in per-app output mode.
 
 Grid tiles the candidate axis; per tile the kernel evaluates a (CB, M) block
 of candidates fully on-chip (VPU transcendentals, no HBM round-trips for the
-intermediate N-term series). f32 throughout (the oracle runs f64; tests bound
-the drift).
+intermediate N-term series). The k-sum is a streaming logsumexp under one
+``lax.fori_loop`` (an unrolled Python loop at MAX_N=128 dominated trace and
+compile time). f32 throughout (the oracle runs f64; tests bound the drift).
+
+``reduce`` selects the output: "sum" (B,) totals Eq. (8) over apps;
+"per_app" (B, M) keeps each app's utility term — the argmin input for grid
+seeding (the budget coupling is handled downstream by phase-1 scaling).
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ MAX_N = 128  # supported container count in-kernel (edge scenarios: N <= ~40)
 
 def _crms_kernel(kappa_ref, lam_ref, xbar_ref, n_ref, c_ref, m_ref, u_ref, *,
                  caps_cpu: float, power_span: float, alpha: float, beta: float,
-                 n_apps: int):
+                 n_apps: int, per_app: bool):
     k1 = kappa_ref[0, :]
     k2 = kappa_ref[1, :]
     k3 = kappa_ref[2, :]
@@ -38,19 +45,23 @@ def _crms_kernel(kappa_ref, lam_ref, xbar_ref, n_ref, c_ref, m_ref, u_ref, *,
     rho_s = jnp.minimum(rho, 1.0 - 1e-6)
     log_a = jnp.log(a)
 
-    # log sum_{k=0}^{N-1} a^k/k!  — running (streaming) logsumexp over k
-    run_max = jnp.zeros_like(a)  # k=0 term is a^0/0! = 1 -> log 1 = 0
-    run_sum = jnp.ones_like(a)
-    log_fact = jnp.zeros_like(a)
-    for kk in range(1, MAX_N):
-        log_fact = log_fact + jnp.log(float(kk))
-        term = kk * log_a - log_fact
-        valid = n > kk
+    # log sum_{k=0}^{N-1} a^k/k! — streaming logsumexp over k as one fori_loop
+    # carry (running max, rescaled running sum, log k!); k=0 term is log 1 = 0
+    def lse_step(kk, carry):
+        run_max, run_sum, log_fact = carry
+        kf = kk.astype(jnp.float32)
+        log_fact = log_fact + jnp.log(kf)
+        term = kf * log_a - log_fact
+        valid = n > kf
         new_max = jnp.where(valid, jnp.maximum(run_max, term), run_max)
         run_sum = run_sum * jnp.exp(run_max - new_max) + jnp.where(
             valid, jnp.exp(term - new_max), 0.0
         )
-        run_max = new_max
+        return new_max, run_sum, log_fact
+
+    run_max, run_sum, _ = jax.lax.fori_loop(
+        1, MAX_N, lse_step, (jnp.zeros_like(a), jnp.ones_like(a), jnp.zeros_like(a))
+    )
     log_head = run_max + jnp.log(run_sum)
 
     # lgamma(n+1) via Stirling (n >= 1 here; exact enough in f32 for Ws)
@@ -66,12 +77,19 @@ def _crms_kernel(kappa_ref, lam_ref, xbar_ref, n_ref, c_ref, m_ref, u_ref, *,
     dp = power_span * n * c / caps_cpu
     util = alpha * ws + beta * dp / lam
     mask = jax.lax.broadcasted_iota(jnp.int32, util.shape, 1) < n_apps
-    u_ref[...] = jnp.sum(jnp.where(mask, util, 0.0), axis=1, keepdims=True)
+    if per_app:
+        u_ref[...] = jnp.where(mask, util, 1e9)
+    else:
+        u_ref[...] = jnp.sum(jnp.where(mask, util, 0.0), axis=1, keepdims=True)
 
 
 def crms_grid_eval(kappa, lam, xbar, n, c, m, *, caps_cpu, power_span, alpha, beta,
-                   block: int = 256, interpret: bool = False):
-    """kappa (M,3) f32; lam/xbar (M,); n/c/m (B,M). Returns utility (B,)."""
+                   block: int = 256, interpret: bool = False, reduce: str = "sum"):
+    """kappa (M,3) f32; lam/xbar (M,); n/c/m (B,M). Returns utility (B,) when
+    ``reduce="sum"``, per-app utility terms (B, M) when ``reduce="per_app"``."""
+    if reduce not in ("sum", "per_app"):
+        raise ValueError(f"reduce must be 'sum' or 'per_app', got {reduce!r}")
+    per_app = reduce == "per_app"
     B, M = n.shape
     Mp = max(8 * ((M + 7) // 8), 8)  # lane-pad the app axis
 
@@ -95,8 +113,9 @@ def crms_grid_eval(kappa, lam, xbar, n, c, m, *, caps_cpu, power_span, alpha, be
 
     kernel = functools.partial(
         _crms_kernel, caps_cpu=float(caps_cpu), power_span=float(power_span),
-        alpha=float(alpha), beta=float(beta), n_apps=M,
+        alpha=float(alpha), beta=float(beta), n_apps=M, per_app=per_app,
     )
+    out_cols = Mp if per_app else 1
     u = pl.pallas_call(
         kernel,
         grid=(nb,),
@@ -108,8 +127,10 @@ def crms_grid_eval(kappa, lam, xbar, n, c, m, *, caps_cpu, power_span, alpha, be
             pl.BlockSpec((CB, Mp), lambda i: (i, 0)),
             pl.BlockSpec((CB, Mp), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((CB, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb * CB, 1), jnp.float32),
+        out_specs=pl.BlockSpec((CB, out_cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * CB, out_cols), jnp.float32),
         interpret=interpret,
     )(kpad, lpad, xpad, npad, cpad, mpad)
+    if per_app:
+        return u[:B, :M]
     return u[:B, 0]

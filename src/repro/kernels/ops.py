@@ -90,10 +90,11 @@ def ssd_chunks(xh, bmat, cmat, da, chunk: int = 128, backend: str = "auto"):
 # CRMS candidate grid — see crms_grid.py
 # ----------------------------------------------------------------------------
 def crms_grid(kappa, lam, xbar, n, c, m, *, caps_cpu, power_span, alpha, beta,
-              backend: str = "auto"):
+              backend: str = "auto", reduce: str = "sum"):
     mode = _resolve(backend)
     if mode == "reference":
-        return _ref.crms_grid_utility(
+        ref_fn = _ref.crms_grid_terms if reduce == "per_app" else _ref.crms_grid_utility
+        return ref_fn(
             jnp.asarray(kappa), jnp.asarray(lam), jnp.asarray(xbar),
             jnp.asarray(n), jnp.asarray(c), jnp.asarray(m),
             caps_cpu, power_span, alpha, beta,
@@ -104,5 +105,5 @@ def crms_grid(kappa, lam, xbar, n, c, m, *, caps_cpu, power_span, alpha, beta,
         jnp.asarray(kappa), jnp.asarray(lam), jnp.asarray(xbar),
         jnp.asarray(n), jnp.asarray(c), jnp.asarray(m),
         caps_cpu=caps_cpu, power_span=power_span, alpha=alpha, beta=beta,
-        interpret=(mode == "interpret"),
+        interpret=(mode == "interpret"), reduce=reduce,
     )

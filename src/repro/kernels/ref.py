@@ -217,9 +217,10 @@ def ssd_chunks(xh, bmat, cmat, da, chunk: int = 256):
 # ----------------------------------------------------------------------------
 # CRMS candidate-grid utility oracle (the paper's own hot loop)
 # ----------------------------------------------------------------------------
-def crms_grid_utility(kappa, lam, xbar, n, c, m, caps_cpu, power_span, alpha, beta):
-    """Vectorized Eq.(1) -> mu -> Erlang-C Ws -> utility for candidate grids.
-    kappa: (M,3); n/c/m: (B,M). Returns per-candidate utility (B,)."""
+def crms_grid_terms(kappa, lam, xbar, n, c, m, caps_cpu, power_span, alpha, beta):
+    """Per-app utility terms (B, M) of Eq. (8) for candidate grids — the oracle
+    for the Pallas kernel's ``reduce="per_app"`` mode (grid seeding). Unstable
+    apps come back as +inf."""
     from repro.core import queueing
     from repro.core.perf_model import eq1_latency
 
@@ -227,4 +228,13 @@ def crms_grid_utility(kappa, lam, xbar, n, c, m, caps_cpu, power_span, alpha, be
     mu = 1000.0 / (xbar * d_ms)
     ws = jax.vmap(jax.vmap(queueing.erlang_ws))(n, jnp.broadcast_to(lam, n.shape), mu)
     dp = power_span * n * c / caps_cpu
-    return jnp.sum(alpha * ws + beta * dp / lam, axis=-1)
+    return alpha * ws + beta * dp / lam
+
+
+def crms_grid_utility(kappa, lam, xbar, n, c, m, caps_cpu, power_span, alpha, beta):
+    """Vectorized Eq.(1) -> mu -> Erlang-C Ws -> utility for candidate grids.
+    kappa: (M,3); n/c/m: (B,M). Returns per-candidate utility (B,)."""
+    return jnp.sum(
+        crms_grid_terms(kappa, lam, xbar, n, c, m, caps_cpu, power_span, alpha, beta),
+        axis=-1,
+    )

@@ -41,14 +41,20 @@ class ReplicaGroup:
 class FleetManager:
     def __init__(self, workloads: list[WorkloadCost] | None = None,
                  n_chips: int = 256, alpha: float = 1.4, beta: float = 0.2,
-                 threshold: float = 0.15, seed: int = 0):
+                 threshold: float = 0.15, seed: int = 0,
+                 newton: str = "structured", grid_seed: bool = True):
         self.workloads = workloads or default_workloads()
         self.caps = pod_caps(n_chips)
         self.apps = build_fleet_apps(self.workloads, seed=seed)
         # the fleet owns the engine packing: one PackedApps per observation
         # epoch, shared by every batched P1/utility evaluation underneath
         self.packed = PackedApps.from_apps(self.apps)
-        self.allocator = QuasiDynamicAllocator(self.caps, alpha, beta, threshold)
+        # the pod binding defaults to the structured O(M) Newton path with
+        # grid-seeded phase-1 hints (the Pallas sweep on TPU) — at 10+ tenants
+        # the dense autodiff Hessian dominates every re-plan otherwise
+        self.allocator = QuasiDynamicAllocator(
+            self.caps, alpha, beta, threshold, newton=newton, grid_seed=grid_seed
+        )
 
     def observe(self, lam: dict[str, float]):
         self.apps = [a.with_lam(lam.get(a.name, a.lam)) for a in self.apps]

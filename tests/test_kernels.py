@@ -126,3 +126,33 @@ def test_crms_grid_interpret_vs_oracle(M, B):
     np.testing.assert_allclose(u_int[finite], u_ref[finite], rtol=1e-4)
     # unstable candidates flagged huge in both
     assert np.all(u_int[~finite] > 1e6)
+
+
+@pytest.mark.parametrize("M,B", [(4, 96), (7, 40)])
+def test_crms_grid_per_app_interpret_vs_oracle(M, B):
+    """Per-app output mode (grid seeding's argmin input) vs the jnp oracle."""
+    rng = np.random.default_rng(1)
+    kappa = np.stack(
+        [rng.uniform(20, 120, M), rng.uniform(0.8, 2.5, M), rng.uniform(0.2, 0.5, M)], axis=1
+    )
+    lam = rng.uniform(4, 12, M)
+    xbar = rng.uniform(4, 6, M)
+    n = rng.integers(3, 12, (B, M)).astype(float)
+    c = rng.uniform(0.5, 3.0, (B, M))
+    m = rng.uniform(0.25, 0.5, (B, M))
+    kw = dict(caps_cpu=30.0, power_span=150.0, alpha=1.4, beta=0.2)
+    t_int = np.asarray(
+        ops.crms_grid(kappa, lam, xbar, n, c, m, backend="interpret", reduce="per_app", **kw)
+    )
+    t_ref = np.asarray(
+        ops.crms_grid(kappa, lam, xbar, n, c, m, backend="reference", reduce="per_app", **kw)
+    )
+    assert t_int.shape == (B, M) and t_ref.shape == (B, M)
+    finite = np.isfinite(t_ref) & (t_ref < 1e8)
+    assert finite.sum() > 0
+    np.testing.assert_allclose(t_int[finite], t_ref[finite], rtol=1e-4)
+    # unstable lanes flagged huge in both (inf in the f64 oracle, 1e9 kernel sentinel)
+    assert np.all(t_int[~finite] > 1e6)
+    # summed mode is the row-sum of per-app mode
+    u_int = np.asarray(ops.crms_grid(kappa, lam, xbar, n, c, m, backend="interpret", **kw))
+    np.testing.assert_allclose(u_int, t_int.sum(axis=1), rtol=1e-5)
