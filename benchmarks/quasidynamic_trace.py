@@ -1,8 +1,12 @@
 """Quasi-dynamic trace benchmark (ROADMAP item 3, paper §V-B): drive the
-QuasiDynamicAllocator with a drifting-λ trace and record per-epoch re-plan
+quasi-dynamic driver with a drifting-λ trace and record per-epoch re-plan
 latency, separating warm re-optimizations (Algorithm 1 skipped, refinement
 warm-started from the cached allocation) from cold ones (fresh CRMS on the
 same arrival rates — what a threshold-less re-planner would pay every epoch).
+
+Runs through the public allocation API: the ``crms`` registry policy behind a
+``QuasiDynamicPolicy`` cache, with warm-vs-cold split read off the structured
+``AllocResult.diagnostics`` instead of re-derived timings.
 
 The trace is a deterministic sinusoid-plus-jitter over the four §VI apps at
 the constrained operating point: slow common-mode swing (capacity pressure)
@@ -14,6 +18,7 @@ must not be slower than cold ones).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 from pathlib import Path
@@ -21,7 +26,7 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks.common import ALPHA, BETA, CONSTRAINED_CAPS, CONSTRAINED_LAM, paper_apps
-from repro.core.crms import QuasiDynamicAllocator, crms
+from repro.api import AllocRequest, QuasiDynamicPolicy, get_policy
 from repro.core.engine import PackedApps
 
 N_EPOCHS = 24
@@ -44,15 +49,20 @@ def run() -> bool:
     caps = CONSTRAINED_CAPS
     trace = lam_trace(CONSTRAINED_LAM)
 
-    allocator = QuasiDynamicAllocator(caps, ALPHA, BETA, threshold=THRESHOLD)
+    crms_policy = get_policy("crms")
+    qd = QuasiDynamicPolicy(crms_policy, threshold=THRESHOLD)
     epochs = []
     for e in range(trace.shape[0]):
         apps = [a.with_lam(float(trace[e, i])) for i, a in enumerate(apps0)]
-        packed = PackedApps.from_apps(apps)
-        will_replan = allocator.should_reoptimize(apps)
+        request = AllocRequest(
+            apps=apps, caps=caps, alpha=ALPHA, beta=BETA,
+            packed=PackedApps.from_apps(apps),
+        )
+        will_replan = qd.should_reoptimize(request)
         t0 = time.perf_counter()
-        alloc = allocator.allocate(apps, packed=packed)
+        result = qd.allocate(request)
         t_warm = time.perf_counter() - t0
+        alloc = result.allocation
         rec = {
             "epoch": e,
             "replanned": bool(will_replan),
@@ -60,13 +70,14 @@ def run() -> bool:
             "utility": float(alloc.utility),
             "feasible": bool(alloc.feasible),
             "stable": bool(alloc.stable),
+            "warm_start": bool(result.diagnostics.warm_start),
         }
         if will_replan and e > 0:
             # cold baseline on the same epoch: fresh CRMS, no warm allocation
             t0 = time.perf_counter()
-            cold = crms(apps, caps, ALPHA, BETA, packed=packed)
+            cold = crms_policy.allocate(dataclasses.replace(request, warm=None))
             rec["cold_latency_s"] = time.perf_counter() - t0
-            rec["cold_utility"] = float(cold.utility)
+            rec["cold_utility"] = float(cold.allocation.utility)
         epochs.append(rec)
 
     replans = [r for r in epochs if r["replanned"] and "cold_latency_s" in r]

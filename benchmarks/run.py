@@ -1,42 +1,72 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV lines
 # (plus human-readable detail) for: Table I, Figs 2-3, 6-10, 11-14, 15-22, the
-# M/M/N validation, the TPU fleet benchmark and the roofline report.
+# M/M/N validation, the solver throughput sweep, the quasi-dynamic trace, the
+# cross-policy scenario matrix, the TPU fleet benchmark and the roofline
+# report.
+#
+# CLI filters (CI and local runs can execute a single section):
+#   --only <section>[,<section>...]   run only the named sections (repeatable)
+#   --policy <name>                   restrict the scenarios section to one
+#                                     registered allocation policy
 from __future__ import annotations
 
+import argparse
 import sys
 
+SECTIONS = (
+    "table1_fitting",
+    "fig2_3_fit_quality",
+    "fig6_10_sufficient",
+    "fig11_14_constrained",
+    "fig15_22_sweeps",
+    "mmn_validation",
+    "solver_throughput",
+    "quasidynamic_trace",
+    "scenarios",
+    "fleet_tpu",
+    "roofline_report",
+)
 
-def main() -> None:
-    from benchmarks import (
-        fig2_3_fit_quality,
-        fig6_10_sufficient,
-        fig11_14_constrained,
-        fig15_22_sweeps,
-        fleet_tpu,
-        mmn_validation,
-        quasidynamic_trace,
-        roofline_report,
-        solver_throughput,
-        table1_fitting,
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="paper-table benchmark driver")
+    ap.add_argument(
+        "--only",
+        action="append",
+        default=None,
+        metavar="SECTION",
+        help=f"run only these sections (repeatable or comma-separated); "
+        f"one of: {', '.join(SECTIONS)}",
     )
+    ap.add_argument(
+        "--policy",
+        default=None,
+        metavar="NAME",
+        help="restrict the scenarios section to one registered policy",
+    )
+    args = ap.parse_args(argv)
+
+    selected = None
+    if args.only:
+        selected = [s for chunk in args.only for s in chunk.split(",") if s]
+        unknown = sorted(set(selected) - set(SECTIONS))
+        if unknown:
+            ap.error(f"unknown section(s): {', '.join(unknown)}; "
+                     f"choose from: {', '.join(SECTIONS)}")
+
+    import importlib
 
     print("name,us_per_call,derived")
     results = {}
-    for mod in (
-        table1_fitting,
-        fig2_3_fit_quality,
-        fig6_10_sufficient,
-        fig11_14_constrained,
-        fig15_22_sweeps,
-        mmn_validation,
-        solver_throughput,
-        quasidynamic_trace,
-        fleet_tpu,
-        roofline_report,
-    ):
-        name = mod.__name__.split(".")[-1]
+    for name in SECTIONS:
+        if selected is not None and name not in selected:
+            continue
         try:
-            results[name] = bool(mod.run())
+            mod = importlib.import_module(f"benchmarks.{name}")
+            if name == "scenarios" and args.policy:
+                results[name] = bool(mod.run(policies=(args.policy,)))
+            else:
+                results[name] = bool(mod.run())
         except Exception as e:  # noqa: BLE001 — report, keep going
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
             results[name] = False

@@ -1,20 +1,32 @@
 """The paper's edge scenario replayed through the discrete-event simulator
-with a time-varying workload: the quasi-dynamic CRMS allocator re-optimizes
-only when the monitor reports material λ drift (§V-B), and the simulated
-response times track the analytic model.
+with a time-varying workload: the quasi-dynamic driver re-optimizes only when
+the monitor reports material λ drift (§V-B), and the simulated response times
+track the analytic model.
+
+Uses the public allocation API: ``QuasiDynamicPolicy`` is the caching/
+threshold decorator over the registered ``crms`` policy (it would wrap any
+other registered policy the same way).
 
 Run:  PYTHONPATH=src python examples/edge_crms_demo.py
 """
 import numpy as np
 
-from repro.core.crms import QuasiDynamicAllocator
+from repro.api import AllocRequest, QuasiDynamicPolicy, SolverOptions
 from repro.core.des import WorkloadPhase, run_quasi_dynamic
 from repro.core.problem import ServerCaps
 from repro.core.profiler import make_paper_apps
 
 apps = make_paper_apps(fitted=True, seed=0)
 caps = ServerCaps(r_cpu=32.0, r_mem=10.5)
-qd = QuasiDynamicAllocator(caps, alpha=1.4, beta=0.2, threshold=0.15)
+options = SolverOptions(qd_threshold=0.15)
+qd = QuasiDynamicPolicy("crms", threshold=options.qd_threshold)
+
+
+def allocator(phase_apps):
+    request = AllocRequest(apps=phase_apps, caps=caps, alpha=1.4, beta=0.2,
+                           options=options)
+    return qd.allocate(request).allocation
+
 
 phases = [
     WorkloadPhase(0.0, (6, 6, 6, 6)),        # steady
@@ -22,7 +34,7 @@ phases = [
     WorkloadPhase(1200.0, (9, 8, 11, 13)),   # evening surge -> re-optimize
     WorkloadPhase(1800.0, (4, 4, 5, 6)),     # night lull -> re-optimize
 ]
-results = run_quasi_dynamic(apps, phases, qd.allocate, phase_len=400.0, seed=0)
+results = run_quasi_dynamic(apps, phases, allocator, phase_len=400.0, seed=0)
 
 print(f"{'t':>6s} {'lam':>22s} {'containers':>14s} {'mean response (s) per app':>34s}")
 for r in results:

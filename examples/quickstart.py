@@ -1,13 +1,15 @@
-"""Quickstart: the paper's full pipeline in ~30 lines.
+"""Quickstart: the paper's full pipeline in ~30 lines, through the public
+allocation API (DESIGN.md §9).
 
-  profile 4 heterogeneous apps -> fit Eq.(1) latency surfaces -> CRMS
-  (Algorithm 1 + 2) under the paper's §VI budgets -> inspect the allocation.
+  profile 4 heterogeneous apps -> fit Eq.(1) latency surfaces -> build an
+  AllocRequest -> run the registered "crms" policy -> inspect the AllocResult
+  (allocation + structured solve diagnostics).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.crms import crms
+from repro.api import AllocRequest, SolverOptions, allocate, list_policies
 from repro.core.problem import ServerCaps
 from repro.core.profiler import make_paper_apps
 
@@ -18,9 +20,19 @@ for a in apps:
     print(f"{a.name:18s} fitted kappa = ({a.kappa[0]:6.2f}, {a.kappa[1]:4.2f}, {a.kappa[2]:4.2f})"
           f"  lam={a.lam}  mem in [{a.r_min}, {a.r_max}] GB")
 
-# 2. optimize under the edge server's budgets (30 cores, 10 GB)
-caps = ServerCaps(r_cpu=30.0, r_mem=10.0)
-alloc = crms(apps, caps, alpha=1.4, beta=0.2)
+# 2. optimize under the edge server's budgets (30 cores, 10 GB). Any policy in
+#    the registry takes the same request — swap "crms" for a baseline name to
+#    compare like-for-like.
+print(f"\nregistered policies: {', '.join(list_policies())}")
+request = AllocRequest(
+    apps=apps,
+    caps=ServerCaps(r_cpu=30.0, r_mem=10.0),
+    alpha=1.4,
+    beta=0.2,
+    options=SolverOptions(),  # newton mode, grid seeding, refinement budget
+)
+result = allocate("crms", request)
+alloc = result.allocation
 
 # 3. inspect
 print(f"\nCRMS allocation  (utility {alloc.utility:.3f}, "
@@ -30,3 +42,7 @@ for i, a in enumerate(apps):
     print(f"{a.name:18s} {alloc.n[i]:3d} {alloc.r_cpu[i]:8.2f} {alloc.r_mem[i]:8.2f} "
           f"{alloc.ws[i]:7.3f}s {alloc.power_w[i]:6.1f}W")
 print(f"{'total':18s} {np.sum(alloc.n):3d} {alloc.total_cpu():8.2f} {alloc.total_mem():8.2f}")
+d = result.diagnostics
+print(f"\ndiagnostics: {d.refine_iters} refinement iters, "
+      f"{d.accepted_moves} accepted moves, {d.p1_calls} batched P1 calls, "
+      f"{d.wall_clock_s:.2f}s wall clock")

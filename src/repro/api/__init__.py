@@ -1,0 +1,69 @@
+"""Public allocation-policy API (DESIGN.md §9).
+
+    from repro.api import AllocRequest, SolverOptions, allocate
+
+    result = allocate("crms", AllocRequest(apps, caps, alpha=1.4, beta=0.2))
+    result.allocation            # the problem.Allocation
+    result.diagnostics           # refinement iters, rescued rows, wall clock…
+
+Submodules:
+    types        — SolverOptions, AllocRequest, AllocResult, Diagnostics
+    registry     — Policy protocol, register_policy, get_policy, allocate
+    policies     — the built-ins: crms, snfc1/2, random_search, gpbo, tpebo, drf
+    quasidynamic — QuasiDynamicPolicy, the §V-B caching decorator
+    scenario     — Scenario, events, ScenarioRunner, BENCH_scenarios schema
+
+Exports resolve lazily (PEP 562): ``repro.core.crms`` imports the contract
+types from here while ``repro.api.policies`` imports the solvers from core —
+laziness is what keeps that mutual dependency acyclic at import time.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    # types
+    "SolverOptions": "repro.api.types",
+    "AllocRequest": "repro.api.types",
+    "AllocResult": "repro.api.types",
+    "Diagnostics": "repro.api.types",
+    "mean_latency_s": "repro.api.types",
+    "total_power_w": "repro.api.types",
+    # registry
+    "Policy": "repro.api.registry",
+    "FunctionPolicy": "repro.api.registry",
+    "register_policy": "repro.api.registry",
+    "get_policy": "repro.api.registry",
+    "list_policies": "repro.api.registry",
+    "allocate": "repro.api.registry",
+    # quasi-dynamic decorator
+    "QuasiDynamicPolicy": "repro.api.quasidynamic",
+    # scenarios
+    "Scenario": "repro.api.scenario",
+    "ScenarioRunner": "repro.api.scenario",
+    "EpochState": "repro.api.scenario",
+    "LambdaDrift": "repro.api.scenario",
+    "LambdaScale": "repro.api.scenario",
+    "LambdaSet": "repro.api.scenario",
+    "AppJoin": "repro.api.scenario",
+    "AppLeave": "repro.api.scenario",
+    "CapResize": "repro.api.scenario",
+    "ScenarioEvent": "repro.api.scenario",
+    "validate_scenarios_doc": "repro.api.scenario",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module_name = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.api' has no attribute {name!r}") from None
+    import importlib
+
+    value = getattr(importlib.import_module(module_name), name)
+    globals()[name] = value  # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,99 @@
+"""Built-in allocation policies: CRMS and the §VI baselines, registered
+behind the one ``allocate(request) -> AllocResult`` contract.
+
+Each adapter is a thin shim over the legacy function (tests pin exact
+Allocation parity for a fixed seed/mix), timing the call and lifting solver
+diagnostics out of ``Allocation.meta`` into the structured AllocResult.
+Policy-specific knobs come in through ``request.extra`` (e.g.
+``{"n_samples": 4000}`` for random_search); search-based baselines take their
+RNG seed from ``request.seed``.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.api.registry import register_policy
+from repro.api.types import AllocRequest, AllocResult, Diagnostics
+from repro.core import baselines
+from repro.core.crms import crms
+from repro.core.problem import Allocation
+
+
+def _result(alloc: Allocation, name: str, t0: float, **extra) -> AllocResult:
+    diag = Diagnostics.from_meta(alloc.meta)
+    diag.wall_clock_s = time.perf_counter() - t0
+    diag.extra.update(extra)
+    return AllocResult(allocation=alloc, policy=name, diagnostics=diag)
+
+
+@register_policy("crms")
+def crms_policy(request: AllocRequest) -> AllocResult:
+    """The paper's CRMS (Algorithms 1+2); the only policy that consumes the
+    full SolverOptions and the warm allocation."""
+    t0 = time.perf_counter()
+    alloc = crms(
+        request.apps,
+        request.caps,
+        request.alpha,
+        request.beta,
+        warm=request.warm,
+        packed=request.packed,
+        options=request.options,
+    )
+    return _result(alloc, "crms", t0)
+
+
+def _snfc(request: AllocRequest, name: str, r_cpu_fixed: float, r_mem_fixed) -> AllocResult:
+    t0 = time.perf_counter()
+    kw = {"r_cpu_fixed": r_cpu_fixed, "r_mem_fixed": r_mem_fixed}
+    kw.update(request.extra)
+    alloc = baselines.snfc(request.apps, request.caps, request.alpha, request.beta, **kw)
+    return _result(alloc, name, t0)
+
+
+@register_policy("snfc1")
+def snfc1_policy(request: AllocRequest) -> AllocResult:
+    """Scale-number-fixed-config, paper SNFC1: c=1.8 cores, m=0.35 GB."""
+    return _snfc(request, "snfc1", 1.8, 0.35)
+
+
+@register_policy("snfc2")
+def snfc2_policy(request: AllocRequest) -> AllocResult:
+    """Scale-number-fixed-config, paper SNFC2: c=1.0 core, m=r_max."""
+    return _snfc(request, "snfc2", 1.0, "rmax")
+
+
+@register_policy("random_search")
+def random_search_policy(request: AllocRequest) -> AllocResult:
+    t0 = time.perf_counter()
+    kw = {"n_samples": 20000, "seed": request.seed}
+    kw.update(request.extra)
+    alloc = baselines.random_search(request.apps, request.caps, request.alpha, request.beta, **kw)
+    return _result(alloc, "random_search", t0, n_samples=kw["n_samples"])
+
+
+@register_policy("gpbo")
+def gpbo_policy(request: AllocRequest) -> AllocResult:
+    t0 = time.perf_counter()
+    kw = {"seed": request.seed}
+    kw.update(request.extra)
+    alloc = baselines.gpbo(request.apps, request.caps, request.alpha, request.beta, **kw)
+    return _result(alloc, "gpbo", t0)
+
+
+@register_policy("tpebo")
+def tpebo_policy(request: AllocRequest) -> AllocResult:
+    t0 = time.perf_counter()
+    kw = {"seed": request.seed}
+    kw.update(request.extra)
+    alloc = baselines.tpebo(request.apps, request.caps, request.alpha, request.beta, **kw)
+    return _result(alloc, "tpebo", t0)
+
+
+@register_policy("drf")
+def drf_policy(request: AllocRequest) -> AllocResult:
+    """Dominant-resource-fairness progressive filling; may return unstable
+    allocations (the paper's APP2/APP4 pathology) — recorded honestly."""
+    t0 = time.perf_counter()
+    alloc = baselines.drf(request.apps, request.caps, request.alpha, request.beta)
+    return _result(alloc, "drf", t0)

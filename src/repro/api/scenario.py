@@ -1,0 +1,432 @@
+"""Declarative scenarios: workload traces driven through any registered policy.
+
+A ``Scenario`` is a pure description — an initial tenant mix, server caps,
+objective weights, an optional continuous λ drift, and a list of discrete
+events (λ shifts, app join/leave, cap resizes) pinned to decision epochs.
+``Scenario.timeline()`` expands it deterministically into per-epoch
+(apps, caps) states, so every policy replays the *same* trace.
+
+``ScenarioRunner`` drives one or more registered policies through that
+timeline (each behind its own QuasiDynamicPolicy cache by default, so the
+§V-B threshold semantics apply uniformly) and emits the cross-policy
+latency / energy / re-plan-time document that ``benchmarks/scenarios.py``
+writes to ``BENCH_scenarios.json``. ``validate_scenarios_doc`` is the
+dependency-free schema gate CI runs on that file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Mapping, Sequence, Union
+
+import numpy as np
+
+from repro.api.quasidynamic import QuasiDynamicPolicy
+from repro.api.registry import Policy, get_policy
+from repro.api.types import (
+    AllocRequest,
+    SolverOptions,
+    mean_latency_s,
+    total_power_w,
+)
+from repro.core.problem import App, ServerCaps
+
+
+# ----------------------------------------------------------------------------
+# Events — discrete changes pinned to a decision epoch
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LambdaScale:
+    """Multiply base arrival rates at ``epoch``: all apps by a float, or per
+    app via a {name: factor} mapping."""
+
+    epoch: int
+    factors: Union[float, Mapping[str, float]]
+
+
+@dataclasses.dataclass(frozen=True)
+class LambdaSet:
+    """Set base arrival rates at ``epoch`` via a {name: lam} mapping."""
+
+    epoch: int
+    lam: Mapping[str, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class AppJoin:
+    """A new tenant joins the mix at ``epoch``."""
+
+    epoch: int
+    app: App
+
+
+@dataclasses.dataclass(frozen=True)
+class AppLeave:
+    """The tenant named ``name`` leaves the mix at ``epoch``."""
+
+    epoch: int
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class CapResize:
+    """The server budget changes at ``epoch`` (power model is preserved)."""
+
+    epoch: int
+    r_cpu: float
+    r_mem: float
+
+
+ScenarioEvent = Union[LambdaScale, LambdaSet, AppJoin, AppLeave, CapResize]
+
+
+def _describe(ev: ScenarioEvent) -> str:
+    if isinstance(ev, LambdaScale):
+        return f"lam_scale:{ev.factors}"
+    if isinstance(ev, LambdaSet):
+        return f"lam_set:{dict(ev.lam)}"
+    if isinstance(ev, AppJoin):
+        return f"app_join:{ev.app.name}"
+    if isinstance(ev, AppLeave):
+        return f"app_leave:{ev.name}"
+    if isinstance(ev, CapResize):
+        return f"cap_resize:({ev.r_cpu},{ev.r_mem})"
+    return repr(ev)
+
+
+# ----------------------------------------------------------------------------
+# Continuous λ drift (the quasidynamic_trace sinusoid, as a declarative spec)
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LambdaDrift:
+    """Deterministic drifting-λ modulation: slow common-mode swing (capacity
+    pressure) plus a faster per-app-phased jitter, both relative to each
+    app's current base rate."""
+
+    amplitude: float = 0.22
+    period: float = 9.0
+    jitter: float = 0.06
+    jitter_period: float = 3.1
+
+    def factor(self, epoch: int, i: int, m: int) -> float:
+        phase = 2.0 * math.pi * i / max(m, 1)
+        swing = self.amplitude * math.sin(2.0 * math.pi * epoch / self.period + phase)
+        jit = self.jitter * math.sin(
+            2.0 * math.pi * epoch / self.jitter_period + 1.7 * phase
+        )
+        return 1.0 + swing + jit
+
+
+# ----------------------------------------------------------------------------
+# Scenario spec + deterministic timeline expansion
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EpochState:
+    """One expanded decision epoch: the mix and caps every policy sees."""
+
+    epoch: int
+    apps: tuple[App, ...]
+    caps: ServerCaps
+    events: tuple[str, ...]  # human-readable descriptions of applied events
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    apps: tuple[App, ...]
+    caps: ServerCaps
+    n_epochs: int = 8
+    alpha: float = 1.4
+    beta: float = 0.2
+    events: tuple[ScenarioEvent, ...] = ()
+    drift: LambdaDrift | None = None
+    options: SolverOptions = dataclasses.field(default_factory=SolverOptions)
+    seed: int = 0
+
+    @classmethod
+    def from_tenant_mix(cls, name: str, M: int, **kw) -> "Scenario":
+        """Build the initial mix with profiler.make_tenant_mix(M) (M a
+        multiple of 4; caps scale with the tile count)."""
+        from repro.core.profiler import make_tenant_mix
+
+        apps, caps, _ = make_tenant_mix(M)
+        return cls(name=name, apps=tuple(apps), caps=caps, **kw)
+
+    def timeline(self) -> list[EpochState]:
+        """Expand events + drift into per-epoch states. Pure and
+        deterministic: every policy replays exactly this trace."""
+        apps = list(self.apps)
+        caps = self.caps
+        base = {a.name: a.lam for a in apps}
+        by_epoch: dict[int, list[ScenarioEvent]] = {}
+        for ev in self.events:
+            if not 0 <= ev.epoch < self.n_epochs:
+                raise ValueError(
+                    f"event {_describe(ev)} at epoch {ev.epoch} outside "
+                    f"[0, {self.n_epochs})"
+                )
+            by_epoch.setdefault(ev.epoch, []).append(ev)
+
+        out = []
+        for e in range(self.n_epochs):
+            applied = []
+            for ev in by_epoch.get(e, ()):
+                if isinstance(ev, LambdaScale):
+                    if isinstance(ev.factors, Mapping):
+                        for nm, f in ev.factors.items():
+                            if nm not in base:
+                                raise ValueError(
+                                    f"{_describe(ev)} names unknown app {nm!r}"
+                                )
+                            base[nm] = base[nm] * float(f)
+                    else:
+                        for nm in base:
+                            base[nm] = base[nm] * float(ev.factors)
+                elif isinstance(ev, LambdaSet):
+                    for nm, lam in ev.lam.items():
+                        if nm not in base:
+                            raise ValueError(
+                                f"{_describe(ev)} names unknown app {nm!r}"
+                            )
+                        base[nm] = float(lam)
+                elif isinstance(ev, AppJoin):
+                    if any(a.name == ev.app.name for a in apps):
+                        raise ValueError(f"app {ev.app.name!r} already in the mix")
+                    apps.append(ev.app)
+                    base[ev.app.name] = ev.app.lam
+                elif isinstance(ev, AppLeave):
+                    if not any(a.name == ev.name for a in apps):
+                        raise ValueError(f"app {ev.name!r} not in the mix")
+                    apps = [a for a in apps if a.name != ev.name]
+                    base.pop(ev.name, None)
+                elif isinstance(ev, CapResize):
+                    caps = ServerCaps(
+                        r_cpu=float(ev.r_cpu), r_mem=float(ev.r_mem), power=caps.power
+                    )
+                applied.append(_describe(ev))
+            m = len(apps)
+            if self.drift is not None:
+                epoch_apps = tuple(
+                    a.with_lam(base[a.name] * self.drift.factor(e, i, m))
+                    for i, a in enumerate(apps)
+                )
+            else:
+                epoch_apps = tuple(a.with_lam(base[a.name]) for a in apps)
+            out.append(EpochState(e, epoch_apps, caps, tuple(applied)))
+        return out
+
+
+# ----------------------------------------------------------------------------
+# Runner
+# ----------------------------------------------------------------------------
+def _num(x: float) -> float | None:
+    """JSON-safe number: non-finite values become null (valid JSON has no
+    Infinity literal; the schema allows number-or-null)."""
+    x = float(x)
+    return x if math.isfinite(x) else None
+
+
+class ScenarioRunner:
+    """Drive registered policies through one scenario's timeline.
+
+    ``quasi_dynamic=True`` (default) wraps each policy in its own
+    QuasiDynamicPolicy cache, so re-plans happen only on mix/caps changes or
+    λ drift past ``scenario.options.qd_threshold`` — the §V-B semantics,
+    uniformly for CRMS and every baseline. ``extra`` carries per-policy
+    request knobs, e.g. ``{"random_search": {"n_samples": 4000}}``.
+    """
+
+    def __init__(
+        self,
+        scenario: Scenario,
+        policies: Sequence[str | Policy],
+        quasi_dynamic: bool = True,
+        extra: Mapping[str, Mapping[str, Any]] | None = None,
+    ):
+        self.scenario = scenario
+        self.policies = [get_policy(p) if isinstance(p, str) else p for p in policies]
+        self.quasi_dynamic = quasi_dynamic
+        self.extra = dict(extra or {})
+
+    def run(self) -> dict:
+        sc = self.scenario
+        timeline = sc.timeline()
+        doc: dict = {
+            "schema_version": 1,
+            "scenario": {
+                "name": sc.name,
+                "n_epochs": sc.n_epochs,
+                "n_apps_initial": len(sc.apps),
+                "alpha": sc.alpha,
+                "beta": sc.beta,
+                "caps": {"r_cpu": float(sc.caps.r_cpu), "r_mem": float(sc.caps.r_mem)},
+                "events": [
+                    {"epoch": ev.epoch, "event": _describe(ev)} for ev in sc.events
+                ],
+                "drift": dataclasses.asdict(sc.drift) if sc.drift else None,
+                "quasi_dynamic": self.quasi_dynamic,
+                "qd_threshold": sc.options.qd_threshold,
+            },
+            "policies": {},
+        }
+        for policy in self.policies:
+            driver: Policy = (
+                QuasiDynamicPolicy(policy, threshold=sc.options.qd_threshold)
+                if self.quasi_dynamic
+                else policy
+            )
+            epochs = []
+            for state in timeline:
+                request = AllocRequest(
+                    apps=state.apps,
+                    caps=state.caps,
+                    alpha=sc.alpha,
+                    beta=sc.beta,
+                    options=sc.options,
+                    seed=sc.seed,
+                    extra=self.extra.get(policy.name, {}),
+                )
+                t0 = time.perf_counter()
+                result = driver.allocate(request)
+                dt = time.perf_counter() - t0
+                alloc = result.allocation
+                epochs.append(
+                    {
+                        "epoch": state.epoch,
+                        "M": len(state.apps),
+                        "events": list(state.events),
+                        "replanned": not result.diagnostics.cache_hit,
+                        "wall_clock_s": dt,
+                        "utility": _num(alloc.utility),
+                        "mean_latency_s": _num(mean_latency_s(state.apps, alloc)),
+                        "total_power_w": _num(total_power_w(alloc)),
+                        "n_containers": int(np.sum(alloc.n)),
+                        "feasible": bool(alloc.feasible),
+                        "stable": bool(alloc.stable),
+                        "warm_start": bool(result.diagnostics.warm_start),
+                        "refine_iters": int(result.diagnostics.refine_iters),
+                        "accepted_moves": int(result.diagnostics.accepted_moves),
+                    }
+                )
+            replans = [r for r in epochs if r["replanned"]]
+            lat = [r["mean_latency_s"] for r in epochs if r["mean_latency_s"] is not None]
+            pwr = [r["total_power_w"] for r in epochs if r["total_power_w"] is not None]
+            doc["policies"][policy.name] = {
+                "epochs": epochs,
+                "summary": {
+                    "n_epochs": len(epochs),
+                    "n_replans": len(replans),
+                    "replan_time_s_mean": (
+                        float(np.mean([r["wall_clock_s"] for r in replans]))
+                        if replans
+                        else None
+                    ),
+                    "mean_latency_s": float(np.mean(lat)) if lat else None,
+                    "total_power_w_mean": float(np.mean(pwr)) if pwr else None,
+                    "all_feasible": all(r["feasible"] for r in epochs),
+                    "all_stable": all(r["stable"] for r in epochs),
+                },
+            }
+        # the cross-policy comparison matrix the benchmark prints/publishes
+        doc["matrix"] = {
+            name: dict(p["summary"]) for name, p in doc["policies"].items()
+        }
+        return doc
+
+
+# ----------------------------------------------------------------------------
+# Schema gate (dependency-free — the container has no jsonschema)
+# ----------------------------------------------------------------------------
+_EPOCH_FIELDS = {
+    "epoch": int,
+    "M": int,
+    "events": list,
+    "replanned": bool,
+    "wall_clock_s": (int, float),
+    "utility": (int, float, type(None)),
+    "mean_latency_s": (int, float, type(None)),
+    "total_power_w": (int, float, type(None)),
+    "n_containers": int,
+    "feasible": bool,
+    "stable": bool,
+    "warm_start": bool,
+    "refine_iters": int,
+    "accepted_moves": int,
+}
+
+_SUMMARY_FIELDS = {
+    "n_epochs": int,
+    "n_replans": int,
+    "replan_time_s_mean": (int, float, type(None)),
+    "mean_latency_s": (int, float, type(None)),
+    "total_power_w_mean": (int, float, type(None)),
+    "all_feasible": bool,
+    "all_stable": bool,
+}
+
+
+def validate_scenarios_doc(doc: Mapping) -> None:
+    """Validate a BENCH_scenarios.json document. Raises ValueError with the
+    offending path on the first violation."""
+
+    def need(cond: bool, path: str, msg: str) -> None:
+        if not cond:
+            raise ValueError(f"BENCH_scenarios schema violation at {path}: {msg}")
+
+    need(isinstance(doc, Mapping), "$", "document must be an object")
+    need(doc.get("schema_version") == 1, "$.schema_version", "must be 1")
+    sc = doc.get("scenario")
+    need(isinstance(sc, Mapping), "$.scenario", "must be an object")
+    for key, typ in (
+        ("name", str),
+        ("n_epochs", int),
+        ("n_apps_initial", int),
+        ("events", list),
+    ):
+        need(isinstance(sc.get(key), typ), f"$.scenario.{key}", f"must be {typ.__name__}")
+    pols = doc.get("policies")
+    need(isinstance(pols, Mapping) and len(pols) > 0, "$.policies", "non-empty object")
+    for name, pol in pols.items():
+        base = f"$.policies.{name}"
+        need(isinstance(pol, Mapping), base, "must be an object")
+        epochs = pol.get("epochs")
+        need(isinstance(epochs, list), f"{base}.epochs", "must be a list")
+        need(
+            len(epochs) == sc["n_epochs"],
+            f"{base}.epochs",
+            f"must have {sc['n_epochs']} entries, got {len(epochs)}",
+        )
+        for i, rec in enumerate(epochs):
+            for key, typ in _EPOCH_FIELDS.items():
+                val = rec.get(key)
+                ok_type = (
+                    key in rec
+                    and isinstance(val, typ)
+                    and not (typ is int and isinstance(val, bool))
+                )
+                need(
+                    ok_type,
+                    f"{base}.epochs[{i}].{key}",
+                    f"missing or wrong type (want {typ})",
+                )
+            need(
+                rec["accepted_moves"] <= rec["refine_iters"],
+                f"{base}.epochs[{i}]",
+                "accepted_moves must be <= refine_iters",
+            )
+        summary = pol.get("summary")
+        need(isinstance(summary, Mapping), f"{base}.summary", "must be an object")
+        for key, typ in _SUMMARY_FIELDS.items():
+            need(
+                key in summary and isinstance(summary[key], typ),
+                f"{base}.summary.{key}",
+                f"missing or wrong type (want {typ})",
+            )
+    matrix = doc.get("matrix")
+    need(isinstance(matrix, Mapping), "$.matrix", "must be an object")
+    need(
+        set(matrix) == set(pols),
+        "$.matrix",
+        "must have exactly one row per policy",
+    )

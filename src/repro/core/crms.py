@@ -9,9 +9,18 @@
                   builds ALL 2M neighbor moves (N_i ± 1) per iteration and
                   evaluates them in ONE batched interior-point solve
                   (engine.p1_solve_batch), accepting the best improving move.
-``QuasiDynamicAllocator`` : the §V-B "quasi-dynamic" driver — re-optimizes only
-                  when monitored arrival rates drift past a threshold, and
-                  warm-starts Algorithm 2 from the cached previous solution.
+``QuasiDynamicAllocator`` : back-compat view of the §V-B "quasi-dynamic"
+                  driver — the behaviour itself lives in
+                  ``repro.api.quasidynamic.QuasiDynamicPolicy``, a caching/
+                  threshold decorator over ANY registered policy.
+
+Solver configuration flows through one frozen ``repro.api.SolverOptions``
+(newton mode, grid seeding, refinement budget, barrier schedule) instead of
+per-call kwargs; the legacy kwargs remain as a thin view that folds into an
+options object. Every solve leaves structured diagnostics (refinement
+iterations, accepted moves, phase-1 rescued/masked rows, warm-vs-cold,
+wall-clock) in ``Allocation.meta["diagnostics"]`` — the API layer lifts them
+into ``AllocResult.diagnostics``.
 
 Robustness extension beyond the paper (documented in DESIGN.md §8): if P1 is
 infeasible at N* (the paper implicitly assumes it is not), we pre-trim N
@@ -20,10 +29,12 @@ greedily by largest resource footprint until a feasible interior point exists.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Sequence
 
 import numpy as np
 
+from repro.api.types import SolverOptions
 from repro.core import queueing
 from repro.core.batch_eval import evaluate_candidates
 from repro.core.engine import as_packed, ideal_configs_batch, p1_solve_batch
@@ -90,9 +101,15 @@ def crms(
     packed=None,
     newton: str = "structured",
     grid_seed: bool = True,
+    options: SolverOptions | None = None,
 ) -> Allocation:
     """Paper Algorithm 2 (CRMS). Returns the final feasible Allocation.
 
+    ``options``: a frozen repro.api.SolverOptions carrying the whole solver
+    configuration (newton mode, grid seeding, refinement budget, barrier
+    schedule). When given it is authoritative; the legacy ``max_refine_iters``/
+    ``newton``/``grid_seed`` kwargs remain as a back-compat view and fold into
+    an options object when ``options`` is None.
     ``solver``: optional serial P1 solver override with the `p1_solve`
     signature; when None (default) every P1 — including all 2M refinement
     neighbors per iteration — goes through the batched engine.
@@ -101,23 +118,45 @@ def crms(
     from the cached container counts.
     ``packed``: optional engine.PackedApps for ``apps`` built by the caller
     (e.g. the fleet binding packs once per observation epoch).
-    ``newton``: Newton direction of the batched engine — "structured" (O(M)
-    analytic default) or "dense" (the autodiff escape hatch).
-    ``grid_seed``: seed each refinement batch's phase-1 CPU hints from the
-    coarse (c, m) utility grid sweep (engine.grid_seed_chints — the Pallas
-    kernel on TPU, the jnp oracle elsewhere) instead of reusing the scalar
-    SP1/warm hints for every neighbor.
+
+    Structured diagnostics (refinement iterations, accepted moves, phase-1
+    rescued/masked row counts, warm-vs-cold, wall-clock) are recorded in
+    ``Allocation.meta["diagnostics"]``.
     """
+    if options is None:
+        options = SolverOptions(
+            newton=newton,
+            grid_seed=grid_seed,
+            max_refine_iters=max_refine_iters,
+        )
+    t_start = time.perf_counter()
+    diag = {
+        "warm_start": False,
+        "refine_iters": 0,
+        "accepted_moves": 0,
+        "p1_calls": 0,
+        "p1_rescued_rows": 0,
+        "p1_masked_rows": 0,
+    }
     packed = packed if packed is not None else as_packed(apps)
     M = len(apps)
 
+    def note_p1(info: dict):
+        diag["p1_calls"] += 1
+        diag["p1_rescued_rows"] += int(info.get("n_rescued", 0))
+        diag["p1_masked_rows"] += int(info.get("n_masked", 0))
+
     def solve_one(n_vec, c_hint):
         if solver is not None:
-            return solver(apps, caps, n_vec, alpha, beta, c_hint=c_hint)
-        return p1_solve_batch(
+            res = solver(apps, caps, n_vec, alpha, beta, c_hint=c_hint)
+            note_p1(res.info)
+            return res
+        batch = p1_solve_batch(
             packed, caps, np.asarray(n_vec, dtype=float)[None, :], alpha, beta,
-            c_hint=c_hint, solver=newton,
-        ).row(0)
+            c_hint=c_hint, solver=options.newton,
+        )
+        note_p1(batch.info)
+        return batch.row(0)
 
     history = []
     ideal = None
@@ -142,6 +181,7 @@ def crms(
                 warm_ok = False
         else:
             warm_ok = False
+    diag["warm_start"] = bool(warm_ok)
 
     if not warm_ok:
         ideal = algorithm1(apps, caps, alpha, beta)
@@ -191,7 +231,7 @@ def crms(
     floors = np.array(
         [max(_stability_floor(apps[i], c_hint[i], apps[i].r_max), 1) for i in range(M)]
     )
-    for _ in range(max_refine_iters):
+    for _ in range(options.max_refine_iters):
         moves = [
             (i, delta)
             for i in range(M)
@@ -200,12 +240,14 @@ def crms(
         ]
         if not moves:
             break
+        diag["refine_iters"] += 1
         best = None
         if solver is not None:
             for i, delta in moves:
                 n_hat = n.copy()
                 n_hat[i] += delta
                 res = solver(apps, caps, n_hat, alpha, beta, c_hint=c_hint)
+                note_p1(res.info)
                 if not res.converged:
                     continue
                 cand = evaluate(apps, n_hat, res.r_cpu, res.r_mem, caps, alpha, beta)
@@ -221,9 +263,11 @@ def crms(
             # the waterfill stay in the fallback chain, so seeding never
             # shrinks the explorable move set
             batch = p1_solve_batch(
-                packed, caps, n_cands, alpha, beta, c_hint=c_hint, profile="refine",
-                solver=newton, seed_grid=grid_seed,
+                packed, caps, n_cands, alpha, beta, c_hint=c_hint,
+                profile=options.refine_profile,
+                solver=options.newton, seed_grid=options.grid_seed,
             )
+            note_p1(batch.info)
             u_cand, _, _ = evaluate_candidates(
                 packed, caps, n_cands.astype(float), batch.r_cpu, batch.r_mem,
                 alpha, beta, hard=True,
@@ -239,6 +283,7 @@ def crms(
         if best is not None and best.utility < cur.utility - 1e-12:
             cur = best
             n = best.n.copy()
+            diag["accepted_moves"] += 1
             history.append({"stage": "greedy", "n": n.tolist(), "U": best.utility})
         else:
             break
@@ -255,14 +300,18 @@ def crms(
     cur.meta["history"] = history
     if ideal is not None:
         cur.meta["ideal"] = [dataclasses.asdict(ic) for ic in ideal]
+    diag["wall_clock_s"] = time.perf_counter() - t_start
+    cur.meta["diagnostics"] = diag
     return cur
 
 
 class QuasiDynamicAllocator:
-    """§V-B quasi-dynamic execution: cache the allocation, re-run Algorithm 2
-    only when monitored λ's drift by more than ``threshold`` (relative) or the
-    app mix changes. Re-optimizations for an unchanged mix warm-start from the
-    cached allocation (container counts + quota hints), skipping Algorithm 1."""
+    """Back-compat view of §V-B quasi-dynamic execution over CRMS.
+
+    The actual caching/threshold behaviour lives in
+    ``repro.api.quasidynamic.QuasiDynamicPolicy`` — a decorator over ANY
+    registered policy; this class pins it to the ``crms`` policy and keeps
+    the historical `(apps, packed=) -> Allocation` call signature."""
 
     def __init__(
         self,
@@ -272,35 +321,43 @@ class QuasiDynamicAllocator:
         threshold: float = 0.15,
         newton: str = "structured",
         grid_seed: bool = True,
+        options: SolverOptions | None = None,
     ):
+        from repro.api.quasidynamic import QuasiDynamicPolicy
+
+        if options is None:
+            options = SolverOptions(
+                newton=newton,
+                grid_seed=grid_seed,
+                qd_threshold=threshold,
+            )
         self.caps = caps
         self.alpha = alpha
         self.beta = beta
-        self.threshold = threshold
-        self.newton = newton
-        self.grid_seed = grid_seed
-        self._lam = None
-        self._names = None
-        self._alloc: Allocation | None = None
-        self.reoptimizations = 0
+        self.options = options
+        self.threshold = options.qd_threshold
+        self._qd = QuasiDynamicPolicy("crms", threshold=options.qd_threshold)
+
+    @property
+    def reoptimizations(self) -> int:
+        return self._qd.reoptimizations
+
+    @property
+    def _alloc(self) -> Allocation | None:
+        # historical attribute some callers peeked at: the cached allocation
+        res = self._qd._result
+        return None if res is None else res.allocation
+
+    def _request(self, apps: Sequence[App], packed=None):
+        from repro.api.types import AllocRequest
+
+        return AllocRequest(
+            apps=apps, caps=self.caps, alpha=self.alpha, beta=self.beta,
+            packed=packed, options=self.options,
+        )
 
     def should_reoptimize(self, apps: Sequence[App]) -> bool:
-        names = tuple(a.name for a in apps)
-        lam = np.array([a.lam for a in apps])
-        if self._alloc is None or names != self._names:
-            return True
-        drift = np.abs(lam - self._lam) / np.maximum(self._lam, 1e-9)
-        return bool(np.any(drift > self.threshold))
+        return self._qd.should_reoptimize(self._request(apps))
 
     def allocate(self, apps: Sequence[App], packed=None) -> Allocation:
-        if self.should_reoptimize(apps):
-            names = tuple(a.name for a in apps)
-            warm = self._alloc if names == self._names else None
-            self._alloc = crms(
-                apps, self.caps, self.alpha, self.beta, warm=warm, packed=packed,
-                newton=self.newton, grid_seed=self.grid_seed,
-            )
-            self._lam = np.array([a.lam for a in apps])
-            self._names = names
-            self.reoptimizations += 1
-        return self._alloc
+        return self._qd.allocate(self._request(apps, packed=packed)).allocation

@@ -682,6 +682,7 @@ def p1_solve_batch(
     if not hint_chain or hint_chain[-1] is not None:
         hint_chain.append(None)
     x0, ok = find_feasible_start_batch(packed, caps, n_np, c_hint=hint_chain[0])
+    n_rescued = 0  # rows the hint fallback chain recovered after a failed start
     for fb in hint_chain[1:]:
         if np.all(ok):
             break
@@ -691,6 +692,7 @@ def p1_solve_batch(
         x0_fb, ok_fb = find_feasible_start_batch(packed, caps, n_np[idx], c_hint=sub)
         x0[idx[ok_fb]] = x0_fb[ok_fb]
         ok[idx[ok_fb]] = True
+        n_rescued += int(np.sum(ok_fb))
 
     r_cpu = np.zeros((B, M))
     r_mem = np.broadcast_to(packed.r_min, (B, M)).copy()
@@ -698,7 +700,8 @@ def p1_solve_batch(
     converged = np.zeros(B, dtype=bool)
     if not np.any(ok):
         return P1BatchResult(
-            r_cpu, r_mem, utility, converged, started=ok, info={"n_feasible_start": 0}
+            r_cpu, r_mem, utility, converged, started=ok,
+            info={"n_feasible_start": 0, "n_rescued": n_rescued, "n_masked": B},
         )
 
     sub = int(np.argmax(ok))  # donor row for masked-out lanes
@@ -730,7 +733,13 @@ def p1_solve_batch(
     converged = ok & np.isfinite(utility)
     return P1BatchResult(
         r_cpu, r_mem, utility, converged, started=ok,
-        info={"n_feasible_start": int(ok.sum()), "batch": B, "padded_to": Bp},
+        info={
+            "n_feasible_start": int(ok.sum()),
+            "n_rescued": n_rescued,
+            "n_masked": int(B - ok.sum()),
+            "batch": B,
+            "padded_to": Bp,
+        },
     )
 
 

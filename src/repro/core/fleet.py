@@ -157,18 +157,20 @@ def fleet_allocator(
     beta: float = 0.2,
     threshold: float = 0.15,
     seed: int = 0,
-    newton: str = "structured",
-    grid_seed: bool = True,
+    options=None,
 ):
     """Fleet binding + a ready quasi-dynamic allocator wired to the structured
     O(M) Newton path and grid-seeded phase-1 (the production defaults of the
-    pod binding). Returns (apps, packed, caps, allocator)."""
+    pod binding). ``options`` is a repro.api.SolverOptions; when None the
+    defaults apply with ``threshold`` as the quasi-dynamic drift threshold.
+    Returns (apps, packed, caps, allocator)."""
+    from repro.api.types import SolverOptions
     from repro.core.crms import QuasiDynamicAllocator
 
+    if options is None:
+        options = SolverOptions(qd_threshold=threshold)
     apps, packed, caps = build_fleet_engine(workloads, n_chips=n_chips, seed=seed)
-    allocator = QuasiDynamicAllocator(
-        caps, alpha, beta, threshold, newton=newton, grid_seed=grid_seed
-    )
+    allocator = QuasiDynamicAllocator(caps, alpha, beta, options=options)
     return apps, packed, caps, allocator
 
 

@@ -10,7 +10,7 @@ Pipeline (mirrors the paper end to end):
      batch slots from the HBM grant (serve/engine.py)
 
 Quasi-dynamic: `FleetManager.observe(lam)` feeds arrival-rate drift; the
-QuasiDynamicAllocator re-optimizes only past the threshold (§V-B).
+QuasiDynamicPolicy re-optimizes only past the threshold (§V-B).
 """
 from __future__ import annotations
 
@@ -18,7 +18,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.crms import QuasiDynamicAllocator
+from repro.api import AllocRequest, AllocResult, QuasiDynamicPolicy, SolverOptions
 from repro.core.engine import PackedApps
 from repro.core.fleet import (
     WorkloadCost,
@@ -42,26 +42,36 @@ class FleetManager:
     def __init__(self, workloads: list[WorkloadCost] | None = None,
                  n_chips: int = 256, alpha: float = 1.4, beta: float = 0.2,
                  threshold: float = 0.15, seed: int = 0,
-                 newton: str = "structured", grid_seed: bool = True):
+                 options: SolverOptions | None = None):
         self.workloads = workloads or default_workloads()
         self.caps = pod_caps(n_chips)
+        self.alpha, self.beta = alpha, beta
         self.apps = build_fleet_apps(self.workloads, seed=seed)
         # the fleet owns the engine packing: one PackedApps per observation
         # epoch, shared by every batched P1/utility evaluation underneath
         self.packed = PackedApps.from_apps(self.apps)
         # the pod binding defaults to the structured O(M) Newton path with
         # grid-seeded phase-1 hints (the Pallas sweep on TPU) — at 10+ tenants
-        # the dense autodiff Hessian dominates every re-plan otherwise
-        self.allocator = QuasiDynamicAllocator(
-            self.caps, alpha, beta, threshold, newton=newton, grid_seed=grid_seed
+        # the dense autodiff Hessian dominates every re-plan otherwise.
+        # SolverOptions is the one configuration object; the quasi-dynamic
+        # caching/threshold behaviour is the generic policy decorator.
+        self.options = options if options is not None else SolverOptions(
+            qd_threshold=threshold
         )
+        self.allocator = QuasiDynamicPolicy("crms", threshold=self.options.qd_threshold)
+        self.last_result: AllocResult | None = None
 
     def observe(self, lam: dict[str, float]):
         self.apps = [a.with_lam(lam.get(a.name, a.lam)) for a in self.apps]
         self.packed = PackedApps.from_apps(self.apps)
 
     def plan(self) -> tuple[Allocation, list[ReplicaGroup]]:
-        alloc = self.allocator.allocate(self.apps, packed=self.packed)
+        request = AllocRequest(
+            apps=self.apps, caps=self.caps, alpha=self.alpha, beta=self.beta,
+            packed=self.packed, options=self.options,
+        )
+        self.last_result = self.allocator.allocate(request)
+        alloc = self.last_result.allocation
         groups = []
         for i, (app, w) in enumerate(zip(self.apps, self.workloads)):
             for _ in range(int(alloc.n[i])):

@@ -1,0 +1,377 @@
+"""Public allocation API: policy-registry parity with the legacy functions,
+AllocResult diagnostics consistency, quasi-dynamic decorator semantics,
+scenario timeline expansion, and the BENCH_scenarios schema gate."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+# shared optional-hypothesis shim (deterministic fallback) — tests/conftest.py
+from conftest import given, settings, st
+
+from repro.api import (
+    AllocRequest,
+    AppJoin,
+    AppLeave,
+    CapResize,
+    LambdaDrift,
+    LambdaScale,
+    LambdaSet,
+    QuasiDynamicPolicy,
+    Scenario,
+    ScenarioRunner,
+    SolverOptions,
+    allocate,
+    get_policy,
+    list_policies,
+    register_policy,
+    validate_scenarios_doc,
+)
+from repro.core.problem import ServerCaps
+from repro.core.profiler import make_paper_apps
+
+CAPS = ServerCaps(r_cpu=30.0, r_mem=10.0)
+APPS = make_paper_apps(lam=(8, 7, 10, 15), fitted=False)
+REQ = AllocRequest(apps=APPS, caps=CAPS, alpha=1.4, beta=0.2)
+
+
+def _same_allocation(a, b):
+    assert np.array_equal(a.n, b.n)
+    np.testing.assert_array_equal(a.r_cpu, b.r_cpu)
+    np.testing.assert_array_equal(a.r_mem, b.r_mem)
+    assert a.utility == b.utility
+    assert a.feasible == b.feasible and a.stable == b.stable
+
+
+# ----------------------------------------------------------------------------
+# Registry basics
+# ----------------------------------------------------------------------------
+def test_registry_lists_all_builtin_policies():
+    names = list_policies()
+    for expected in ("crms", "snfc1", "snfc2", "random_search", "gpbo", "tpebo", "drf"):
+        assert expected in names
+
+
+def test_registry_unknown_policy_raises():
+    with pytest.raises(KeyError, match="unknown policy"):
+        get_policy("nope")
+
+
+def test_registry_duplicate_registration_raises():
+    # must hold even on a fresh registry: registering a builtin name loads
+    # the builtins first, collides cleanly, and leaves the registry intact
+    with pytest.raises(ValueError, match="already registered"):
+        register_policy("crms")(lambda req: None)
+    assert "drf" in list_policies()  # registry not bricked by the collision
+
+
+def test_solver_options_validation():
+    with pytest.raises(ValueError, match="newton"):
+        SolverOptions(newton="bogus")
+    with pytest.raises(ValueError, match="max_refine_iters"):
+        SolverOptions(max_refine_iters=-1)
+
+
+# ----------------------------------------------------------------------------
+# Policy parity with the legacy functions (fixed seed/mix)
+# ----------------------------------------------------------------------------
+def test_crms_policy_parity_and_diagnostics():
+    from repro.core.crms import crms
+
+    legacy = crms(APPS, CAPS, 1.4, 0.2)
+    result = allocate("crms", REQ)
+    assert result.policy == "crms"
+    _same_allocation(result.allocation, legacy)
+    # diagnostics populated + internally consistent
+    d = result.diagnostics
+    assert d.wall_clock_s > 0
+    assert d.p1_calls >= 1
+    assert 0 <= d.accepted_moves <= d.refine_iters
+    assert d.refine_iters <= REQ.options.max_refine_iters
+    assert d.p1_rescued_rows >= 0 and d.p1_masked_rows >= 0
+    assert not d.warm_start and not d.cache_hit
+
+
+def test_snfc_policies_parity():
+    from repro.core.baselines import snfc
+
+    r1 = allocate("snfc1", REQ)
+    _same_allocation(
+        r1.allocation, snfc(APPS, CAPS, 1.4, 0.2, r_cpu_fixed=1.8, r_mem_fixed=0.35)
+    )
+    r2 = allocate("snfc2", REQ)
+    _same_allocation(
+        r2.allocation, snfc(APPS, CAPS, 1.4, 0.2, r_cpu_fixed=1.0, r_mem_fixed="rmax")
+    )
+
+
+def test_random_search_policy_parity():
+    from repro.core.baselines import random_search
+
+    req = dataclasses.replace(REQ, seed=3, extra={"n_samples": 4000})
+    result = allocate("random_search", req)
+    legacy = random_search(APPS, CAPS, 1.4, 0.2, n_samples=4000, seed=3)
+    _same_allocation(result.allocation, legacy)
+    assert result.diagnostics.extra["n_samples"] == 4000
+
+
+def test_bo_policies_parity():
+    from repro.core.baselines import gpbo, tpebo
+
+    knobs = {"n_init": 8, "n_iters": 8}
+    req = dataclasses.replace(REQ, seed=1, extra=knobs)
+    _same_allocation(
+        allocate("gpbo", req).allocation, gpbo(APPS, CAPS, 1.4, 0.2, seed=1, **knobs)
+    )
+    _same_allocation(
+        allocate("tpebo", req).allocation, tpebo(APPS, CAPS, 1.4, 0.2, seed=1, **knobs)
+    )
+
+
+def test_drf_policy_parity():
+    from repro.core.baselines import drf
+
+    result = allocate("drf", REQ)
+    _same_allocation(result.allocation, drf(APPS, CAPS, 1.4, 0.2))
+    assert result.diagnostics.wall_clock_s > 0
+    # DRF records no refinement work
+    assert result.diagnostics.refine_iters == 0 == result.diagnostics.accepted_moves
+
+
+# ----------------------------------------------------------------------------
+# Legacy surfaces: crms kwargs + QuasiDynamicAllocator signature
+# ----------------------------------------------------------------------------
+def test_crms_legacy_kwargs_match_options_object():
+    from repro.core.crms import crms
+
+    via_kwargs = crms(APPS, CAPS, 1.4, 0.2, max_refine_iters=3, grid_seed=False)
+    via_options = crms(
+        APPS, CAPS, 1.4, 0.2,
+        options=SolverOptions(max_refine_iters=3, grid_seed=False),
+    )
+    _same_allocation(via_kwargs, via_options)
+    assert via_kwargs.meta["diagnostics"]["refine_iters"] <= 3
+
+
+def test_legacy_quasi_dynamic_allocator_roundtrip():
+    from repro.core.crms import QuasiDynamicAllocator
+
+    qd = QuasiDynamicAllocator(CAPS, 1.4, 0.2, threshold=0.15)
+    a1 = qd.allocate(APPS)
+    assert qd.reoptimizations == 1
+    assert a1.feasible and a1.stable
+    # small drift: cached allocation returned, no re-optimization
+    small = [a.with_lam(a.lam * 1.04) for a in APPS]
+    assert not qd.should_reoptimize(small)
+    a2 = qd.allocate(small)
+    assert qd.reoptimizations == 1
+    _same_allocation(a1, a2)
+    # large drift: re-optimize, warm-started from the cache
+    big = [a.with_lam(a.lam * 1.4) for a in APPS]
+    a3 = qd.allocate(big)
+    assert qd.reoptimizations == 2
+    assert a3.meta["diagnostics"]["warm_start"] or a3.meta["history"][0]["stage"] == "warm_start"
+
+
+# ----------------------------------------------------------------------------
+# QuasiDynamicPolicy decorator over arbitrary policies
+# ----------------------------------------------------------------------------
+def test_quasidynamic_wraps_any_policy_with_cache_semantics():
+    qd = QuasiDynamicPolicy("drf", threshold=0.15)
+    assert qd.name == "qd:drf"
+    r1 = qd.allocate(REQ)
+    assert qd.reoptimizations == 1 and not r1.diagnostics.cache_hit
+    # below threshold -> cache hit flagged, same allocation object served
+    small = dataclasses.replace(
+        REQ, apps=[a.with_lam(a.lam * 1.01) for a in APPS]
+    )
+    r2 = qd.allocate(small)
+    assert qd.reoptimizations == 1
+    assert r2.diagnostics.cache_hit
+    assert r2.allocation is r1.allocation
+    # a cap resize invalidates the cache even with identical lambdas
+    resized = dataclasses.replace(small, caps=ServerCaps(28.0, 10.0))
+    qd.allocate(resized)
+    assert qd.reoptimizations == 2
+    # app mix change invalidates too
+    fewer = dataclasses.replace(resized, apps=list(APPS[:3]))
+    qd.allocate(fewer)
+    assert qd.reoptimizations == 3
+
+
+def test_quasidynamic_warm_starts_crms_on_drift():
+    qd = QuasiDynamicPolicy("crms", threshold=0.1)
+    qd.allocate(REQ)
+    # 12% growth: past the threshold but gentle enough that the cached counts
+    # stay feasible — the warm start must actually be taken
+    drifted = dataclasses.replace(
+        REQ, apps=[a.with_lam(a.lam * 1.12) for a in APPS]
+    )
+    r2 = qd.allocate(drifted)
+    assert r2.diagnostics.warm_start
+    assert r2.feasible and r2.stable
+    # 30% growth invalidates the cached counts: warm attempted, honestly
+    # reported as fallen back to the cold path
+    surged = dataclasses.replace(
+        REQ, apps=[a.with_lam(a.lam * 1.3) for a in APPS]
+    )
+    r3 = qd.allocate(surged)
+    assert not r3.diagnostics.warm_start
+    assert [h["stage"] for h in r3.allocation.meta["history"]][0] == "warm_start"
+
+
+# ----------------------------------------------------------------------------
+# Scenario timeline expansion
+# ----------------------------------------------------------------------------
+def _mini_scenario(**kw):
+    base = dict(
+        name="t",
+        apps=tuple(APPS),
+        caps=CAPS,
+        n_epochs=4,
+        alpha=1.4,
+        beta=0.2,
+    )
+    base.update(kw)
+    return Scenario(**base)
+
+
+def test_timeline_applies_events_in_order():
+    burst = dataclasses.replace(APPS[2], name="burst", lam=5.0)
+    sc = _mini_scenario(
+        events=(
+            AppJoin(epoch=1, app=burst),
+            CapResize(epoch=2, r_cpu=40.0, r_mem=12.0),
+            LambdaSet(epoch=2, lam={"burst": 9.0}),
+            AppLeave(epoch=3, name="burst"),
+        )
+    )
+    tl = sc.timeline()
+    assert [len(s.apps) for s in tl] == [4, 5, 5, 4]
+    assert tl[0].caps.r_cpu == 30.0 and tl[2].caps.r_cpu == 40.0
+    assert tl[3].caps.r_cpu == 40.0  # resize persists
+    by_name = {a.name: a for a in tl[2].apps}
+    assert by_name["burst"].lam == 9.0
+    assert "burst" not in {a.name for a in tl[3].apps}
+    # no drift: base λ's pass through untouched
+    assert [a.lam for a in tl[0].apps] == [a.lam for a in APPS]
+
+
+def test_timeline_lambda_scale_and_drift():
+    sc = _mini_scenario(
+        events=(LambdaScale(epoch=2, factors=2.0),),
+        drift=LambdaDrift(amplitude=0.1, jitter=0.0),
+    )
+    tl = sc.timeline()
+    drift = sc.drift
+    for e, state in enumerate(tl):
+        scale = 2.0 if e >= 2 else 1.0
+        for i, (a0, a) in enumerate(zip(APPS, state.apps)):
+            expected = a0.lam * scale * drift.factor(e, i, len(APPS))
+            assert a.lam == pytest.approx(expected)
+    # deterministic: a second expansion is identical
+    tl2 = sc.timeline()
+    assert all(
+        [a.lam for a in s1.apps] == [a.lam for a in s2.apps]
+        for s1, s2 in zip(tl, tl2)
+    )
+
+
+def test_timeline_rejects_bad_events():
+    with pytest.raises(ValueError, match="outside"):
+        _mini_scenario(events=(CapResize(epoch=9, r_cpu=1.0, r_mem=1.0),)).timeline()
+    with pytest.raises(ValueError, match="already in the mix"):
+        _mini_scenario(events=(AppJoin(epoch=0, app=APPS[0]),)).timeline()
+    with pytest.raises(ValueError, match="not in the mix"):
+        _mini_scenario(events=(AppLeave(epoch=0, name="ghost"),)).timeline()
+    # a typo'd app name must fail loudly, not silently replay the wrong trace
+    with pytest.raises(ValueError, match="unknown app"):
+        _mini_scenario(events=(LambdaSet(epoch=0, lam={"ghost": 9.0}),)).timeline()
+    with pytest.raises(ValueError, match="unknown app"):
+        _mini_scenario(events=(LambdaScale(epoch=0, factors={"ghost": 2.0}),)).timeline()
+
+
+def test_default_benchmark_scenario_valid_at_any_length():
+    import sys
+
+    sys.path.insert(0, ".")
+    from benchmarks.scenarios import default_scenario
+
+    for n in (1, 2, 3, 5, 10):
+        tl = default_scenario(n_epochs=n).timeline()
+        assert len(tl) == n  # join/resize/leave clamp into short traces
+
+
+@given(e=st.integers(0, 40), i=st.integers(0, 15), amp=st.floats(0.0, 0.4))
+@settings(max_examples=40, deadline=None)
+def test_drift_factor_bounded(e, i, amp):
+    """|factor - 1| can never exceed amplitude + jitter (λ stays positive)."""
+    drift = LambdaDrift(amplitude=amp, jitter=0.05)
+    f = drift.factor(e, i, 16)
+    assert abs(f - 1.0) <= amp + 0.05 + 1e-12
+
+
+# ----------------------------------------------------------------------------
+# ScenarioRunner + schema gate (cheap policies only — CRMS runs in the
+# scenario benchmark and the CI scenario-smoke job)
+# ----------------------------------------------------------------------------
+def test_scenario_runner_produces_valid_document():
+    burst = dataclasses.replace(APPS[2], name="burst", lam=5.0)
+    sc = _mini_scenario(
+        n_epochs=3,
+        events=(AppJoin(epoch=1, app=burst), AppLeave(epoch=2, name="burst")),
+        drift=LambdaDrift(),
+    )
+    doc = ScenarioRunner(
+        sc, ["drf", "random_search"], extra={"random_search": {"n_samples": 1500}}
+    ).run()
+    validate_scenarios_doc(doc)
+    assert set(doc["policies"]) == {"drf", "random_search"}
+    for pol in doc["policies"].values():
+        assert len(pol["epochs"]) == 3
+        # mix changed every epoch -> the quasi-dynamic cache must re-plan
+        assert all(r["replanned"] for r in pol["epochs"])
+        assert pol["summary"]["n_replans"] == 3
+        assert all(r["feasible"] for r in pol["epochs"])  # budget feasibility
+        assert [r["M"] for r in pol["epochs"]] == [4, 5, 4]
+    assert set(doc["matrix"]) == set(doc["policies"])
+
+
+def test_schema_validator_rejects_corrupt_documents():
+    sc = _mini_scenario(n_epochs=2)
+    doc = ScenarioRunner(sc, ["drf"]).run()
+    validate_scenarios_doc(doc)
+
+    bad = {**doc, "schema_version": 2}
+    with pytest.raises(ValueError, match="schema_version"):
+        validate_scenarios_doc(bad)
+
+    import copy
+
+    bad = copy.deepcopy(doc)
+    del bad["policies"]["drf"]["epochs"][0]["utility"]
+    with pytest.raises(ValueError, match="utility"):
+        validate_scenarios_doc(bad)
+
+    bad = copy.deepcopy(doc)
+    bad["policies"]["drf"]["epochs"][0]["accepted_moves"] = 99
+    with pytest.raises(ValueError, match="accepted_moves"):
+        validate_scenarios_doc(bad)
+
+    bad = copy.deepcopy(doc)
+    bad["matrix"]["ghost"] = {}
+    with pytest.raises(ValueError, match="matrix"):
+        validate_scenarios_doc(bad)
+
+
+# ----------------------------------------------------------------------------
+# Warm-start diagnostics through the public API
+# ----------------------------------------------------------------------------
+def test_warm_request_reports_warm_diagnostics():
+    cold = allocate("crms", REQ)
+    warm_req = dataclasses.replace(REQ, warm=cold.allocation)
+    warm = allocate("crms", warm_req)
+    assert warm.diagnostics.warm_start
+    assert warm.feasible and warm.stable
+    # warm quality: not materially worse than the cold solve
+    assert warm.utility <= cold.utility * 1.05 + 1e-9

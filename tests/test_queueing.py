@@ -5,56 +5,9 @@ import math
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:
-    # Fallback when hypothesis isn't installed: deterministic seeded sampling
-    # over the same strategy boxes (bounds first, then uniform draws) so the
-    # property tests still run — with less adversarial example search.
-    class _Strategy:
-        def __init__(self, lo, hi, integer):
-            self.lo, self.hi, self.integer = lo, hi, integer
-
-        def draw(self, rng):
-            if self.integer:
-                return int(rng.integers(self.lo, self.hi + 1))
-            return float(rng.uniform(self.lo, self.hi))
-
-    class st:  # noqa: N801 — mirrors the hypothesis module name
-        @staticmethod
-        def integers(lo, hi):
-            return _Strategy(lo, hi, integer=True)
-
-        @staticmethod
-        def floats(lo, hi):
-            return _Strategy(lo, hi, integer=False)
-
-    def given(**strats):
-        def deco(fn):
-            def wrapper():
-                rng = np.random.default_rng(0)
-                n_examples = min(getattr(fn, "_max_examples", 25), 25)
-                items = sorted(strats.items())
-                # two boundary probes, then seeded uniform draws
-                fn(**{k: s.lo for k, s in items})
-                fn(**{k: s.hi for k, s in items})
-                for _ in range(n_examples):
-                    fn(**{k: s.draw(rng) for k, s in items})
-
-            # keep the collected name/doc but NOT the wrapped signature —
-            # pytest would otherwise read the example params as fixtures
-            wrapper.__name__ = fn.__name__
-            wrapper.__doc__ = fn.__doc__
-            return wrapper
-
-        return deco
-
-    def settings(max_examples=25, **_kw):
-        def deco(fn):
-            fn._max_examples = max_examples
-            return fn
-
-        return deco
+# shared optional-hypothesis shim (deterministic fallback when the runtime
+# env lacks hypothesis) — see tests/conftest.py
+from conftest import given, settings, st
 
 from repro.core import queueing
 
