@@ -8,10 +8,18 @@
 #   --only <section>[,<section>...]   run only the named sections (repeatable)
 #   --policy <name>                   restrict the scenarios section to one
 #                                     registered allocation policy
+#   --list                            print registered benchmark sections and
+#                                     allocation policies, then exit
 from __future__ import annotations
 
 import argparse
 import sys
+from pathlib import Path
+
+if __package__ in (None, ""):  # run as a plain script: repo root + src on sys.path
+    _root = Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root / "src"))
+    sys.path.insert(0, str(_root))
 
 SECTIONS = (
     "table1_fitting",
@@ -44,7 +52,23 @@ def main(argv=None) -> None:
         metavar="NAME",
         help="restrict the scenarios section to one registered policy",
     )
+    ap.add_argument(
+        "--list",
+        action="store_true",
+        help="print registered benchmark sections and allocation policies, then exit",
+    )
     args = ap.parse_args(argv)
+
+    if args.list:
+        from repro.api import list_policies
+
+        print("benchmark sections:")
+        for name in SECTIONS:
+            print(f"  {name}")
+        print("registered policies (repro.api.registry):")
+        for name in list_policies():
+            print(f"  {name}")
+        return
 
     selected = None
     if args.only:

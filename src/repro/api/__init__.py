@@ -34,8 +34,9 @@ _EXPORTS = {
     "get_policy": "repro.api.registry",
     "list_policies": "repro.api.registry",
     "allocate": "repro.api.registry",
-    # quasi-dynamic decorator
+    # quasi-dynamic / predictive decorators
     "QuasiDynamicPolicy": "repro.api.quasidynamic",
+    "PredictivePolicy": "repro.api.quasidynamic",
     # scenarios
     "Scenario": "repro.api.scenario",
     "ScenarioRunner": "repro.api.scenario",

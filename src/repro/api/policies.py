@@ -10,6 +10,7 @@ RNG seed from ``request.seed``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 from repro.api.registry import register_policy
@@ -28,9 +29,13 @@ def _result(alloc: Allocation, name: str, t0: float, **extra) -> AllocResult:
 
 @register_policy("crms")
 def crms_policy(request: AllocRequest) -> AllocResult:
-    """The paper's CRMS (Algorithms 1+2); the only policy that consumes the
-    full SolverOptions and the warm allocation."""
+    """The paper's CRMS (Algorithms 1+2) with the UNWEIGHTED Eq. (8)
+    objective — any ``options.app_weights`` are stripped so this policy stays
+    the paper baseline; priority weighting is ``crms_priority``'s job."""
     t0 = time.perf_counter()
+    options = request.options
+    if options.app_weights:
+        options = dataclasses.replace(options, app_weights=())
     alloc = crms(
         request.apps,
         request.caps,
@@ -38,9 +43,33 @@ def crms_policy(request: AllocRequest) -> AllocResult:
         request.beta,
         warm=request.warm,
         packed=request.packed,
-        options=request.options,
+        options=options,
     )
     return _result(alloc, "crms", t0)
+
+
+@register_policy("crms_priority")
+def crms_priority_policy(request: AllocRequest) -> AllocResult:
+    """Priority-weighted CRMS: per-app weights scale the latency term to
+    α·w_i·Ws_i through the whole pipeline (ideal configs, P1, refinement).
+    Weights come from ``request.extra["weights"]`` (a {name: weight} mapping,
+    wins when present) or ``request.options.app_weights``; with neither it is
+    exactly the paper's CRMS."""
+    t0 = time.perf_counter()
+    options = request.options
+    extra_w = request.extra.get("weights")
+    if extra_w:
+        options = dataclasses.replace(options, app_weights=dict(extra_w))
+    alloc = crms(
+        request.apps,
+        request.caps,
+        request.alpha,
+        request.beta,
+        warm=request.warm,
+        packed=request.packed,
+        options=options,
+    )
+    return _result(alloc, "crms_priority", t0, weights=dict(options.app_weights))
 
 
 def _snfc(request: AllocRequest, name: str, r_cpu_fixed: float, r_mem_fixed) -> AllocResult:
@@ -97,3 +126,22 @@ def drf_policy(request: AllocRequest) -> AllocResult:
     t0 = time.perf_counter()
     alloc = baselines.drf(request.apps, request.caps, request.alpha, request.beta)
     return _result(alloc, "drf", t0)
+
+
+def _register_predictive() -> None:
+    # Imported here (not at module top): quasidynamic imports the registry,
+    # which is mid-load while this module registers the built-ins.
+    from repro.api.quasidynamic import PredictivePolicy
+
+    register_policy("predictive_crms")(
+        PredictivePolicy("crms", name="predictive_crms")
+    )
+
+
+# The predictive re-planner over CRMS. Unlike every other built-in this is a
+# STATEFUL singleton — its value is the λ history carried across calls. The
+# ScenarioRunner calls .reset() before each trace replay; direct registry
+# users replaying an unrelated trace with the same app names/caps must do the
+# same (get_policy("predictive_crms").reset()) or build their own
+# PredictivePolicy("crms") instance.
+_register_predictive()

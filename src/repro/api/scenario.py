@@ -100,20 +100,24 @@ def _describe(ev: ScenarioEvent) -> str:
 # ----------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class LambdaDrift:
-    """Deterministic drifting-λ modulation: slow common-mode swing (capacity
-    pressure) plus a faster per-app-phased jitter, both relative to each
-    app's current base rate."""
+    """Deterministic drifting-λ modulation: slow swing (capacity pressure)
+    plus a faster per-app-phased jitter, both relative to each app's current
+    base rate. ``phase_spread`` spreads the apps' swing phases around the
+    circle (1.0, the default, keeps the historical out-of-phase drift;
+    0.0 makes the swing common-mode — the diurnal day/night pattern)."""
 
     amplitude: float = 0.22
     period: float = 9.0
     jitter: float = 0.06
     jitter_period: float = 3.1
+    phase_spread: float = 1.0
 
     def factor(self, epoch: int, i: int, m: int) -> float:
-        phase = 2.0 * math.pi * i / max(m, 1)
+        phase = 2.0 * math.pi * i * self.phase_spread / max(m, 1)
+        jitter_phase = 2.0 * math.pi * i / max(m, 1)
         swing = self.amplitude * math.sin(2.0 * math.pi * epoch / self.period + phase)
         jit = self.jitter * math.sin(
-            2.0 * math.pi * epoch / self.jitter_period + 1.7 * phase
+            2.0 * math.pi * epoch / self.jitter_period + 1.7 * jitter_phase
         )
         return 1.0 + swing + jit
 
@@ -152,6 +156,124 @@ class Scenario:
 
         apps, caps, _ = make_tenant_mix(M)
         return cls(name=name, apps=tuple(apps), caps=caps, **kw)
+
+    # ------------------------------------------------------- trace library
+    @classmethod
+    def burst(
+        cls,
+        apps: Sequence[App],
+        caps: ServerCaps,
+        *,
+        name: str = "burst",
+        n_epochs: int = 10,
+        app: str | None = None,
+        factor: float = 2.5,
+        start: int | None = None,
+        length: int | None = None,
+        **kw,
+    ) -> "Scenario":
+        """Flash-crowd step: one tenant's λ jumps by ``factor`` at epoch
+        ``start`` and reverts ``length`` epochs later. Default burst tenant
+        is the LIGHTEST one (smallest base λ) so the step stays inside the
+        feasible capacity region of a constrained operating point."""
+        apps = tuple(apps)
+        if app is None:
+            app = min(apps, key=lambda a: a.lam).name
+        start = max(1, n_epochs // 3) if start is None else start
+        length = max(2, n_epochs // 3) if length is None else length
+        start = min(start, n_epochs - 1)
+        stop = min(start + length, n_epochs - 1)
+        events = [LambdaScale(epoch=start, factors={app: factor})]
+        # a revert clamped onto the step epoch would cancel the burst outright
+        # (factor · 1/factor in the same epoch); short traces burst to the end
+        if stop > start:
+            events.append(LambdaScale(epoch=stop, factors={app: 1.0 / factor}))
+        return cls(
+            name=name, apps=apps, caps=caps, n_epochs=n_epochs,
+            events=tuple(events), **kw,
+        )
+
+    @classmethod
+    def failover(
+        cls,
+        apps: Sequence[App],
+        caps: ServerCaps,
+        *,
+        name: str = "failover",
+        n_epochs: int = 10,
+        drop: float = 0.25,
+        start: int | None = None,
+        recovery: int | None = None,
+        **kw,
+    ) -> "Scenario":
+        """Node failure + recovery: the server budget drops by ``drop``
+        (both resources — a lost node takes its CPU and memory with it) at
+        epoch ``start`` and is restored at epoch ``recovery``."""
+        if not 0.0 < drop < 1.0:
+            raise ValueError(f"drop must be in (0, 1), got {drop}")
+        start = max(1, n_epochs // 3) if start is None else start
+        recovery = min(start + max(2, n_epochs // 4), n_epochs - 1) if recovery is None else recovery
+        events = (
+            CapResize(
+                epoch=min(start, n_epochs - 1),
+                r_cpu=caps.r_cpu * (1.0 - drop),
+                r_mem=caps.r_mem * (1.0 - drop),
+            ),
+            CapResize(epoch=recovery, r_cpu=caps.r_cpu, r_mem=caps.r_mem),
+        )
+        return cls(name=name, apps=tuple(apps), caps=caps, n_epochs=n_epochs, events=events, **kw)
+
+    @classmethod
+    def diurnal(
+        cls,
+        apps: Sequence[App],
+        caps: ServerCaps,
+        *,
+        name: str = "diurnal",
+        n_epochs: int = 12,
+        amplitude: float = 0.25,
+        jitter: float = 0.04,
+        **kw,
+    ) -> "Scenario":
+        """Diurnal sinusoid: one common-mode day/night swing over the whole
+        trace (all tenants peak together — the hardest capacity pressure),
+        with a small per-app jitter on top."""
+        drift = LambdaDrift(
+            amplitude=amplitude,
+            period=float(n_epochs),
+            jitter=jitter,
+            phase_spread=0.0,
+        )
+        return cls(name=name, apps=tuple(apps), caps=caps, n_epochs=n_epochs, drift=drift, **kw)
+
+    @classmethod
+    def priority_tenants(
+        cls,
+        apps: Sequence[App],
+        caps: ServerCaps,
+        *,
+        name: str = "priority",
+        n_epochs: int = 10,
+        priority: Mapping[str, float] | None = None,
+        weight: float = 4.0,
+        drift: LambdaDrift | None = None,
+        **kw,
+    ) -> "Scenario":
+        """Priority-tenant trace: ``priority`` maps tenant names to latency
+        weights (default: the heaviest tenant gets ``weight``), carried in
+        ``options.app_weights`` for weight-aware policies (``crms_priority``)
+        while unweighted policies replay the identical trace."""
+        apps = tuple(apps)
+        if priority is None:
+            priority = {max(apps, key=lambda a: a.lam).name: weight}
+        options = kw.pop("options", SolverOptions())
+        options = dataclasses.replace(options, app_weights=dict(priority))
+        if drift is None:
+            drift = LambdaDrift()
+        return cls(
+            name=name, apps=apps, caps=caps, n_epochs=n_epochs,
+            drift=drift, options=options, **kw,
+        )
 
     def timeline(self) -> list[EpochState]:
         """Expand events + drift into per-epoch states. Pure and
@@ -227,14 +349,103 @@ def _num(x: float) -> float | None:
     return x if math.isfinite(x) else None
 
 
+def _predicted_mean_s(apps: Sequence[App], alloc) -> float:
+    """The analytic model's λ-weighted mean response prediction for this
+    allocation AT THE EPOCH'S ACTUAL RATES — unlike ``mean_latency_s``, which
+    reads the Ws the solver stored (stale when a cached allocation is replayed
+    under drift). This is the number the DES backend's achieved latency is
+    compared against: the gap between them is model error plus staleness, the
+    closed-loop signal the analytic backend cannot see."""
+    from repro.core.problem import service_rate
+    from repro.core.queueing import erlang_ws_np
+
+    lam = np.array([a.lam for a in apps], dtype=float)
+    ws = np.empty(len(apps))
+    for i, app in enumerate(apps):
+        n = int(alloc.n[i])
+        if n < 1:
+            return float("inf")
+        mu = float(service_rate(app, float(alloc.r_cpu[i]), float(alloc.r_mem[i])))
+        ws[i] = erlang_ws_np(n, app.lam, mu)
+    if not np.all(np.isfinite(ws)):
+        return float("inf")
+    return float(np.sum(lam * ws) / np.sum(lam))
+
+
+class _DesReplay:
+    """Replay one policy's trace through the fleet DES: each epoch's arrivals
+    run against the allocation the policy actually chose, with epoch-boundary
+    reconfiguration carrying in-flight work across re-plans."""
+
+    def __init__(self, seed: int, epoch_s: float):
+        from repro.core.des import FleetSimulator
+
+        self.sim = FleetSimulator(seed=seed)
+        self.epoch_s = float(epoch_s)
+        self._present: dict[int, list[str]] = {}  # epoch -> app names simulated
+        self._live: set[str] = set()  # names currently receiving arrivals
+
+    def apply_epoch(self, state: EpochState, alloc) -> None:
+        from repro.core.problem import service_rate
+
+        names = [a.name for a in state.apps]
+        for gone in self._live - set(names):
+            self.sim.retire(gone)
+        for i, app in enumerate(state.apps):
+            mu = float(service_rate(app, float(alloc.r_cpu[i]), float(alloc.r_mem[i])))
+            n = int(alloc.n[i])
+            if app.name in self.sim.apps():
+                self.sim.configure(app.name, lam=app.lam, mu=mu, n_servers=n)
+                self.sim.activate(app.name)  # no-op unless re-joining
+            else:
+                self.sim.add_app(app.name, app.lam, mu, n)
+        self._live = set(names)
+        self._present[state.epoch] = names
+        self.sim.run_until((state.epoch + 1) * self.epoch_s)
+
+    def finish(self) -> None:
+        self.sim.drain()
+
+    def epoch_achieved(self, epoch: int) -> tuple[float | None, float | None, int]:
+        """(mean, p95, n_completed) pooled over every app present in the
+        epoch, for requests that ARRIVED inside the epoch window."""
+        t0, t1 = epoch * self.epoch_s, (epoch + 1) * self.epoch_s
+        chunks = [
+            self.sim.responses(name, t0, t1) for name in self._present.get(epoch, [])
+        ]
+        resp = np.concatenate(chunks) if chunks else np.empty(0)
+        if resp.size == 0:
+            return None, None, 0
+        return (
+            float(np.mean(resp)),
+            float(np.percentile(resp, 95)),
+            int(resp.size),
+        )
+
+
+_BACKENDS = ("analytic", "des")
+
+
 class ScenarioRunner:
     """Drive registered policies through one scenario's timeline.
 
     ``quasi_dynamic=True`` (default) wraps each policy in its own
     QuasiDynamicPolicy cache, so re-plans happen only on mix/caps changes or
     λ drift past ``scenario.options.qd_threshold`` — the §V-B semantics,
-    uniformly for CRMS and every baseline. ``extra`` carries per-policy
+    uniformly for CRMS and every baseline. Policies that manage their own
+    cache (``self_caching = True``, e.g. the predictive re-planner) are
+    driven directly and reset before the replay. ``extra`` carries per-policy
     request knobs, e.g. ``{"random_search": {"n_samples": 4000}}``.
+
+    ``backend`` selects the evaluation layer:
+
+    * ``"analytic"`` — score each epoch with the Erlang-C model the solver
+      itself optimizes (fast; the historical closed-feedback loop).
+    * ``"des"`` — ALSO replay each epoch's Poisson arrivals through the fleet
+      discrete-event simulator against the policy's chosen allocation
+      (``epoch_s`` simulated seconds per decision epoch, common-random-number
+      arrivals across policies) and record the *achieved* mean/p95 latency
+      next to the model's prediction, plus their relative gap per epoch.
     """
 
     def __init__(
@@ -243,17 +454,37 @@ class ScenarioRunner:
         policies: Sequence[str | Policy],
         quasi_dynamic: bool = True,
         extra: Mapping[str, Mapping[str, Any]] | None = None,
+        backend: str = "analytic",
+        epoch_s: float = 60.0,
     ):
+        if backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+        if epoch_s <= 0:
+            raise ValueError(f"epoch_s must be > 0, got {epoch_s}")
         self.scenario = scenario
         self.policies = [get_policy(p) if isinstance(p, str) else p for p in policies]
         self.quasi_dynamic = quasi_dynamic
         self.extra = dict(extra or {})
+        self.backend = backend
+        self.epoch_s = float(epoch_s)
+
+    def _driver(self, policy: Policy) -> Policy:
+        if getattr(policy, "self_caching", False) or not self.quasi_dynamic:
+            driver = policy
+        else:
+            driver = QuasiDynamicPolicy(
+                policy, threshold=self.scenario.options.qd_threshold
+            )
+        if hasattr(driver, "reset"):
+            driver.reset()
+        return driver
 
     def run(self) -> dict:
         sc = self.scenario
         timeline = sc.timeline()
         doc: dict = {
-            "schema_version": 1,
+            "schema_version": 2,
+            "backend": self.backend,
             "scenario": {
                 "name": sc.name,
                 "n_epochs": sc.n_epochs,
@@ -267,14 +498,17 @@ class ScenarioRunner:
                 "drift": dataclasses.asdict(sc.drift) if sc.drift else None,
                 "quasi_dynamic": self.quasi_dynamic,
                 "qd_threshold": sc.options.qd_threshold,
+                "app_weights": dict(sc.options.app_weights),
+                "epoch_s": self.epoch_s,
             },
             "policies": {},
         }
         for policy in self.policies:
-            driver: Policy = (
-                QuasiDynamicPolicy(policy, threshold=sc.options.qd_threshold)
-                if self.quasi_dynamic
-                else policy
+            driver = self._driver(policy)
+            replay = (
+                _DesReplay(seed=sc.seed, epoch_s=self.epoch_s)
+                if self.backend == "des"
+                else None
             )
             epochs = []
             for state in timeline:
@@ -291,6 +525,8 @@ class ScenarioRunner:
                 result = driver.allocate(request)
                 dt = time.perf_counter() - t0
                 alloc = result.allocation
+                if replay is not None:
+                    replay.apply_epoch(state, alloc)
                 epochs.append(
                     {
                         "epoch": state.epoch,
@@ -300,6 +536,10 @@ class ScenarioRunner:
                         "wall_clock_s": dt,
                         "utility": _num(alloc.utility),
                         "mean_latency_s": _num(mean_latency_s(state.apps, alloc)),
+                        "predicted_mean_s": _num(_predicted_mean_s(state.apps, alloc)),
+                        "achieved_mean_s": None,
+                        "achieved_p95_s": None,
+                        "latency_gap_rel": None,
                         "total_power_w": _num(total_power_w(alloc)),
                         "n_containers": int(np.sum(alloc.n)),
                         "feasible": bool(alloc.feasible),
@@ -309,9 +549,20 @@ class ScenarioRunner:
                         "accepted_moves": int(result.diagnostics.accepted_moves),
                     }
                 )
+            if replay is not None:
+                replay.finish()
+                for rec in epochs:
+                    ach, p95, _ = replay.epoch_achieved(rec["epoch"])
+                    rec["achieved_mean_s"] = ach
+                    rec["achieved_p95_s"] = p95
+                    pred = rec["predicted_mean_s"]
+                    if ach is not None and pred is not None and pred > 0:
+                        rec["latency_gap_rel"] = abs(ach - pred) / pred
             replans = [r for r in epochs if r["replanned"]]
             lat = [r["mean_latency_s"] for r in epochs if r["mean_latency_s"] is not None]
             pwr = [r["total_power_w"] for r in epochs if r["total_power_w"] is not None]
+            ach = [r["achieved_mean_s"] for r in epochs if r["achieved_mean_s"] is not None]
+            gap = [r["latency_gap_rel"] for r in epochs if r["latency_gap_rel"] is not None]
             doc["policies"][policy.name] = {
                 "epochs": epochs,
                 "summary": {
@@ -323,6 +574,8 @@ class ScenarioRunner:
                         else None
                     ),
                     "mean_latency_s": float(np.mean(lat)) if lat else None,
+                    "achieved_mean_s": float(np.mean(ach)) if ach else None,
+                    "mean_gap_rel": float(np.mean(gap)) if gap else None,
                     "total_power_w_mean": float(np.mean(pwr)) if pwr else None,
                     "all_feasible": all(r["feasible"] for r in epochs),
                     "all_stable": all(r["stable"] for r in epochs),
@@ -346,6 +599,10 @@ _EPOCH_FIELDS = {
     "wall_clock_s": (int, float),
     "utility": (int, float, type(None)),
     "mean_latency_s": (int, float, type(None)),
+    "predicted_mean_s": (int, float, type(None)),
+    "achieved_mean_s": (int, float, type(None)),
+    "achieved_p95_s": (int, float, type(None)),
+    "latency_gap_rel": (int, float, type(None)),
     "total_power_w": (int, float, type(None)),
     "n_containers": int,
     "feasible": bool,
@@ -360,35 +617,49 @@ _SUMMARY_FIELDS = {
     "n_replans": int,
     "replan_time_s_mean": (int, float, type(None)),
     "mean_latency_s": (int, float, type(None)),
+    "achieved_mean_s": (int, float, type(None)),
+    "mean_gap_rel": (int, float, type(None)),
     "total_power_w_mean": (int, float, type(None)),
     "all_feasible": bool,
     "all_stable": bool,
 }
 
 
-def validate_scenarios_doc(doc: Mapping) -> None:
-    """Validate a BENCH_scenarios.json document. Raises ValueError with the
-    offending path on the first violation."""
+def _need(cond: bool, path: str, msg: str) -> None:
+    if not cond:
+        raise ValueError(f"BENCH_scenarios schema violation at {path}: {msg}")
 
-    def need(cond: bool, path: str, msg: str) -> None:
-        if not cond:
-            raise ValueError(f"BENCH_scenarios schema violation at {path}: {msg}")
 
-    need(isinstance(doc, Mapping), "$", "document must be an object")
-    need(doc.get("schema_version") == 1, "$.schema_version", "must be 1")
+def _validate_one(doc: Mapping, root: str = "$") -> None:
+    """Validate one scenario document (the per-scenario value of a bundle,
+    or a standalone single-scenario file)."""
+    need = _need
+    need(isinstance(doc, Mapping), root, "document must be an object")
+    need(doc.get("schema_version") == 2, f"{root}.schema_version", "must be 2")
+    backend = doc.get("backend")
+    need(backend in _BACKENDS, f"{root}.backend", f"must be one of {_BACKENDS}")
     sc = doc.get("scenario")
-    need(isinstance(sc, Mapping), "$.scenario", "must be an object")
+    need(isinstance(sc, Mapping), f"{root}.scenario", "must be an object")
     for key, typ in (
         ("name", str),
         ("n_epochs", int),
         ("n_apps_initial", int),
         ("events", list),
+        ("app_weights", Mapping),
+        ("epoch_s", (int, float)),
     ):
-        need(isinstance(sc.get(key), typ), f"$.scenario.{key}", f"must be {typ.__name__}")
+        tn = typ.__name__ if isinstance(typ, type) else str(typ)
+        need(isinstance(sc.get(key), typ), f"{root}.scenario.{key}", f"must be {tn}")
+    for wname, wval in sc["app_weights"].items():
+        need(
+            isinstance(wval, (int, float)) and wval > 0,
+            f"{root}.scenario.app_weights[{wname}]",
+            "weights must be positive numbers",
+        )
     pols = doc.get("policies")
-    need(isinstance(pols, Mapping) and len(pols) > 0, "$.policies", "non-empty object")
+    need(isinstance(pols, Mapping) and len(pols) > 0, f"{root}.policies", "non-empty object")
     for name, pol in pols.items():
-        base = f"$.policies.{name}"
+        base = f"{root}.policies.{name}"
         need(isinstance(pol, Mapping), base, "must be an object")
         epochs = pol.get("epochs")
         need(isinstance(epochs, list), f"{base}.epochs", "must be a list")
@@ -415,6 +686,26 @@ def validate_scenarios_doc(doc: Mapping) -> None:
                 f"{base}.epochs[{i}]",
                 "accepted_moves must be <= refine_iters",
             )
+            if backend == "analytic":
+                for key in ("achieved_mean_s", "achieved_p95_s", "latency_gap_rel"):
+                    need(
+                        rec[key] is None,
+                        f"{base}.epochs[{i}].{key}",
+                        "must be null under the analytic backend",
+                    )
+            else:  # des — a null achieved is legal only for a degenerate
+                # window that completed zero requests (checked per policy below)
+                need(
+                    (rec["achieved_mean_s"] is None) == (rec["achieved_p95_s"] is None),
+                    f"{base}.epochs[{i}]",
+                    "achieved_mean_s and achieved_p95_s must be null together",
+                )
+        if backend == "des":
+            need(
+                any(rec["achieved_mean_s"] is not None for rec in epochs),
+                f"{base}.epochs",
+                "des backend must record achieved latency in at least one epoch",
+            )
         summary = pol.get("summary")
         need(isinstance(summary, Mapping), f"{base}.summary", "must be an object")
         for key, typ in _SUMMARY_FIELDS.items():
@@ -424,9 +715,45 @@ def validate_scenarios_doc(doc: Mapping) -> None:
                 f"missing or wrong type (want {typ})",
             )
     matrix = doc.get("matrix")
-    need(isinstance(matrix, Mapping), "$.matrix", "must be an object")
+    need(isinstance(matrix, Mapping), f"{root}.matrix", "must be an object")
     need(
         set(matrix) == set(pols),
-        "$.matrix",
+        f"{root}.matrix",
         "must have exactly one row per policy",
     )
+
+
+def validate_scenarios_doc(doc: Mapping) -> None:
+    """Validate a BENCH_scenarios.json document — either a single scenario
+    run or a multi-scenario bundle ``{"schema_version": 2, "backend": ...,
+    "scenarios": {name: <single-scenario doc>}}``. Raises ValueError with the
+    offending path on the first violation."""
+    _need(isinstance(doc, Mapping), "$", "document must be an object")
+    if "scenarios" in doc:
+        _need(doc.get("schema_version") == 2, "$.schema_version", "must be 2")
+        _need(
+            doc.get("backend") in _BACKENDS,
+            "$.backend",
+            f"must be one of {_BACKENDS}",
+        )
+        scenarios = doc["scenarios"]
+        _need(
+            isinstance(scenarios, Mapping) and len(scenarios) > 0,
+            "$.scenarios",
+            "non-empty object",
+        )
+        for name, sub in scenarios.items():
+            _validate_one(sub, root=f"$.scenarios.{name}")
+            _need(
+                sub.get("backend") == doc["backend"],
+                f"$.scenarios.{name}.backend",
+                "must match the bundle backend",
+            )
+            _need(
+                isinstance(sub.get("scenario"), Mapping)
+                and sub["scenario"].get("name") == name,
+                f"$.scenarios.{name}.scenario.name",
+                "must match the bundle key",
+            )
+    else:
+        _validate_one(doc)

@@ -47,6 +47,17 @@ class SolverOptions:
     qd_threshold     : relative λ-drift threshold of the quasi-dynamic driver
                        (§V-B); consumed by QuasiDynamicPolicy, ignored by a
                        bare single-shot solve.
+    app_weights      : per-app priority weights for the latency term — pairs
+                       of (app name, weight); apps not named weigh 1.0. A
+                       weight w_i scales the α·Ws_i term of Eq. (8) to
+                       α·w_i·Ws_i throughout the CRMS pipeline (Algorithm 1
+                       ideal configs, the P1 interior point, grid seeding and
+                       the greedy refinement objective). Accepts a mapping or
+                       an iterable of pairs; normalized to a sorted tuple so
+                       the options object stays frozen/hashable. Consumed by
+                       the priority-weighted CRMS policy (``crms_priority``);
+                       the plain ``crms`` policy keeps the paper's unweighted
+                       objective.
     """
 
     newton: str = "structured"
@@ -54,6 +65,7 @@ class SolverOptions:
     max_refine_iters: int = 64
     refine_profile: str = "refine"
     qd_threshold: float = 0.15
+    app_weights: tuple = ()
 
     def __post_init__(self):
         if self.newton not in _NEWTON_MODES:
@@ -62,6 +74,24 @@ class SolverOptions:
             raise ValueError(f"max_refine_iters must be >= 0, got {self.max_refine_iters}")
         if not 0.0 <= self.qd_threshold:
             raise ValueError(f"qd_threshold must be >= 0, got {self.qd_threshold}")
+        items = (
+            self.app_weights.items()
+            if isinstance(self.app_weights, Mapping)
+            else self.app_weights
+        )
+        norm = tuple(sorted((str(name), float(w)) for name, w in items))
+        for name, w in norm:
+            if not (w > 0.0 and np.isfinite(w)):
+                raise ValueError(f"app_weights[{name!r}] must be finite and > 0, got {w}")
+        object.__setattr__(self, "app_weights", norm)
+
+    def weight_vector(self, names: Sequence[str]) -> np.ndarray | None:
+        """(M,) weight array aligned with ``names``, or None when unweighted
+        (no app_weights set) so callers can keep the scalar fast path."""
+        if not self.app_weights:
+            return None
+        table = dict(self.app_weights)
+        return np.array([table.get(n, 1.0) for n in names], dtype=float)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import queueing
-from repro.core.engine import as_packed
+from repro.core.engine import _alpha_arg, as_packed
 from repro.core.perf_model import eq1_latency
 from repro.core.problem import App, ServerCaps
 
@@ -99,7 +99,8 @@ def utility_terms_batch(
 
 def evaluate_candidates(apps, caps: ServerCaps, n, c, m, alpha, beta, hard=True):
     """NumPy-friendly wrapper. ``apps`` may be a Sequence[App] or an
-    already-built engine.PackedApps (pack once, evaluate many)."""
+    already-built engine.PackedApps (pack once, evaluate many). ``alpha`` may
+    be a scalar or a per-app (M,) priority-weighted latency weight."""
     packed = as_packed(apps).as_dict()
     u, ws, feas = utility_batch(
         packed,
@@ -109,7 +110,7 @@ def evaluate_candidates(apps, caps: ServerCaps, n, c, m, alpha, beta, hard=True)
         float(caps.r_cpu),
         float(caps.r_mem),
         float(caps.power.span),
-        float(alpha),
+        _alpha_arg(alpha),
         float(beta),
         hard=hard,
     )

@@ -129,6 +129,13 @@ def crms(
             grid_seed=grid_seed,
             max_refine_iters=max_refine_iters,
         )
+    # Priority weighting (options.app_weights): the latency term becomes
+    # α·w_i·Ws_i everywhere — Algorithm 1's ideal configs, every P1 interior
+    # point, grid seeding, and the refinement acceptance objective — so the
+    # weighted and unweighted pipelines are the same code path with a vector
+    # vs scalar alpha.
+    w = options.weight_vector([a.name for a in apps])
+    alpha_w = alpha if w is None else alpha * w
     t_start = time.perf_counter()
     diag = {
         "warm_start": False,
@@ -148,11 +155,11 @@ def crms(
 
     def solve_one(n_vec, c_hint):
         if solver is not None:
-            res = solver(apps, caps, n_vec, alpha, beta, c_hint=c_hint)
+            res = solver(apps, caps, n_vec, alpha_w, beta, c_hint=c_hint)
             note_p1(res.info)
             return res
         batch = p1_solve_batch(
-            packed, caps, np.asarray(n_vec, dtype=float)[None, :], alpha, beta,
+            packed, caps, np.asarray(n_vec, dtype=float)[None, :], alpha_w, beta,
             c_hint=c_hint, solver=options.newton,
         )
         note_p1(batch.info)
@@ -173,7 +180,7 @@ def crms(
         history.append({"stage": "warm_start", "n": n.tolist(), "U": float(warm.utility)})
         res = solve_one(n, c_hint)
         if res.converged:
-            cand = evaluate(apps, n, res.r_cpu, res.r_mem, caps, alpha, beta)
+            cand = evaluate(apps, n, res.r_cpu, res.r_mem, caps, alpha, beta, weights=w)
             if cand.feasible and cand.stable:
                 cur = cand
                 history.append({"stage": "p1_warm", "n": n.tolist(), "U": res.utility})
@@ -184,7 +191,7 @@ def crms(
     diag["warm_start"] = bool(warm_ok)
 
     if not warm_ok:
-        ideal = algorithm1(apps, caps, alpha, beta)
+        ideal = algorithm1(apps, caps, alpha_w, beta)
         n = np.array([ic.n for ic in ideal], dtype=int)
         c = np.array([ic.r_cpu for ic in ideal])
         m = np.array([ic.r_mem for ic in ideal])
@@ -219,7 +226,7 @@ def crms(
                 c, m = res.r_cpu, res.r_mem
             history.append({"stage": "p1_initial", "n": n.tolist(), "U": res.utility})
 
-        cur = evaluate(apps, n, c, m, caps, alpha, beta)
+        cur = evaluate(apps, n, c, m, caps, alpha, beta, weights=w)
     else:
         over = True  # warm start implies the constrained regime was entered
 
@@ -246,11 +253,11 @@ def crms(
             for i, delta in moves:
                 n_hat = n.copy()
                 n_hat[i] += delta
-                res = solver(apps, caps, n_hat, alpha, beta, c_hint=c_hint)
+                res = solver(apps, caps, n_hat, alpha_w, beta, c_hint=c_hint)
                 note_p1(res.info)
                 if not res.converged:
                     continue
-                cand = evaluate(apps, n_hat, res.r_cpu, res.r_mem, caps, alpha, beta)
+                cand = evaluate(apps, n_hat, res.r_cpu, res.r_mem, caps, alpha, beta, weights=w)
                 if not (cand.feasible and cand.stable):
                     continue
                 if best is None or cand.utility < best.utility:
@@ -263,20 +270,20 @@ def crms(
             # the waterfill stay in the fallback chain, so seeding never
             # shrinks the explorable move set
             batch = p1_solve_batch(
-                packed, caps, n_cands, alpha, beta, c_hint=c_hint,
+                packed, caps, n_cands, alpha_w, beta, c_hint=c_hint,
                 profile=options.refine_profile,
                 solver=options.newton, seed_grid=options.grid_seed,
             )
             note_p1(batch.info)
             u_cand, _, _ = evaluate_candidates(
                 packed, caps, n_cands.astype(float), batch.r_cpu, batch.r_mem,
-                alpha, beta, hard=True,
+                alpha_w, beta, hard=True,
             )
             u_cand = np.where(batch.converged, u_cand, np.inf)
             for j in np.argsort(u_cand):
                 if not np.isfinite(u_cand[j]) or u_cand[j] >= cur.utility - 1e-12:
                     break
-                cand = evaluate(apps, n_cands[j], batch.r_cpu[j], batch.r_mem[j], caps, alpha, beta)
+                cand = evaluate(apps, n_cands[j], batch.r_cpu[j], batch.r_mem[j], caps, alpha, beta, weights=w)
                 if cand.feasible and cand.stable:
                     best = cand
                     break
@@ -293,10 +300,12 @@ def crms(
     if not over:
         res = solve_one(n, c_hint)
         if res.converged:
-            cand = evaluate(apps, n, res.r_cpu, res.r_mem, caps, alpha, beta)
+            cand = evaluate(apps, n, res.r_cpu, res.r_mem, caps, alpha, beta, weights=w)
             if cand.feasible and cand.stable and cand.utility < cur.utility:
                 cur = cand
 
+    if w is not None:
+        cur.meta["app_weights"] = {a.name: float(wi) for a, wi in zip(apps, w)}
     cur.meta["history"] = history
     if ideal is not None:
         cur.meta["ideal"] = [dataclasses.asdict(ic) for ic in ideal]

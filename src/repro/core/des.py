@@ -1,17 +1,46 @@
-"""Discrete-event M/M/N simulator (replaces the paper's SimPy harness).
+"""Fleet-scale discrete-event M/M/N simulation (replaces the paper's SimPy
+harness AND the old single-cluster toy).
 
-Event-driven (heapq): Poisson arrivals per application, N_i parallel
-exponential servers, FCFS queue — exactly the §IV-B model. Used to (a)
-validate the analytic Erlang-C `Ws` and (b) drive the quasi-dynamic allocator
-demo with time-varying λ.
+One event loop simulates every application's M/M/N_i cluster simultaneously:
+Poisson arrivals per app, N_i parallel exponential servers, FCFS queues —
+exactly the §IV-B model, but as a *fleet*. The simulator is the independent
+evaluation layer behind ``ScenarioRunner(backend="des")``: it replays each
+decision epoch's arrivals against the allocation a policy actually chose and
+reports *achieved* latency next to the analytic model's prediction.
+
+Design points (DESIGN.md §10):
+
+* **Vectorized event batching** — inter-arrival and service draws come from
+  NumPy-batched exponential chunks per cluster (one ``rng.exponential(size=…)``
+  per ~4k draws), so the Python event loop never calls the RNG per event.
+  Window statistics (mean/p95/queue integrals) are likewise computed by
+  vectorized masking over the per-cluster completion logs.
+* **Common-random-number arrivals** — each cluster's arrival stream is seeded
+  by ``(seed, app name)`` only, so every policy replayed through the same
+  scenario sees the *same* arrival process; only service dynamics differ.
+* **Mid-run reconfiguration** — ``configure()`` changes ``lam``/``mu``/
+  ``n_servers`` at any instant, *carrying in-flight work*: requests already in
+  service keep their scheduled departure (service time was drawn at start),
+  new service starts use the new rate, and a shrink below the busy count is
+  non-preemptive (excess servers retire as they finish). λ changes are exact
+  by memorylessness: the pending arrival is superseded by a fresh draw at the
+  new rate.
+* **Warmup-correct integrals** — queue-length and busy-time integrals are
+  read via ``snapshot()`` at arbitrary instants and differenced over the
+  measurement window, so ``mean_queue_len``/``utilization`` exclude the
+  warmup transient exactly like the response-time log does.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+from collections import deque
 from typing import Callable, Sequence
 
 import numpy as np
+
+_ARRIVAL, _DEPART = 0, 1
+_CHUNK = 4096  # batched RNG draw size (vectorized event batching)
 
 
 @dataclasses.dataclass
@@ -23,6 +52,272 @@ class SimStats:
     utilization: float
 
 
+class _Cluster:
+    """One application's M/M/N cluster inside the fleet loop."""
+
+    __slots__ = (
+        "name", "lam", "mu", "n_servers", "busy", "queue", "version", "active",
+        "arr_rng", "svc_rng", "_arr_buf", "_arr_pos", "_svc_buf", "_svc_pos",
+        "arr_log", "resp_log", "n_arrived", "qlen_integral", "busy_time",
+        "last_t",
+    )
+
+    def __init__(self, name, lam, mu, n_servers, arr_rng, svc_rng, t0):
+        self.name = name
+        self.lam = float(lam)
+        self.mu = float(mu)
+        self.n_servers = int(n_servers)
+        self.busy = 0
+        self.queue: deque[float] = deque()  # arrival times of waiting requests
+        self.version = 0  # bumps on λ reconfig; stale arrival events are dropped
+        self.active = True  # arrivals enabled
+        self.arr_rng = arr_rng
+        self.svc_rng = svc_rng
+        self._arr_buf = np.empty(0)
+        self._arr_pos = 0
+        self._svc_buf = np.empty(0)
+        self._svc_pos = 0
+        self.arr_log: list[float] = []  # arrival time of each COMPLETED request
+        self.resp_log: list[float] = []  # matching response time
+        self.n_arrived = 0
+        self.qlen_integral = 0.0
+        self.busy_time = 0.0
+        self.last_t = float(t0)
+
+    def next_interarrival(self) -> float:
+        if self._arr_pos >= self._arr_buf.shape[0]:
+            self._arr_buf = self.arr_rng.exponential(1.0 / self.lam, size=_CHUNK)
+            self._arr_pos = 0
+        v = self._arr_buf[self._arr_pos]
+        self._arr_pos += 1
+        return float(v)
+
+    def next_service(self) -> float:
+        if self._svc_pos >= self._svc_buf.shape[0]:
+            self._svc_buf = self.svc_rng.exponential(1.0 / self.mu, size=_CHUNK)
+            self._svc_pos = 0
+        v = self._svc_buf[self._svc_pos]
+        self._svc_pos += 1
+        return float(v)
+
+    def advance(self, t: float) -> None:
+        """Accumulate the piecewise-constant queue/busy integrals up to t."""
+        dt = t - self.last_t
+        if dt > 0.0:
+            self.qlen_integral += len(self.queue) * dt
+            self.busy_time += self.busy * dt
+            self.last_t = t
+
+
+def _stream(seed: int, name: str, salt: int) -> np.random.Generator:
+    """Deterministic per-(seed, app, purpose) RNG stream. Arrival streams use
+    salt 17 and depend on (seed, name) ONLY, so two policies replaying the
+    same scenario see identical arrival processes (common random numbers)."""
+    key = np.frombuffer(name.encode("utf-8"), dtype=np.uint8)
+    return np.random.default_rng([int(seed) & 0x7FFFFFFF, salt, *key.tolist()])
+
+
+class FleetSimulator:
+    """Event-driven fleet of M/M/N_i clusters with mid-run reconfiguration.
+
+    Typical closed-loop use (the ScenarioRunner DES backend)::
+
+        sim = FleetSimulator(seed=0)
+        sim.add_app("app0", lam=8.0, mu=2.5, n_servers=5)
+        sim.run_until(60.0)                       # epoch 0
+        sim.configure("app0", lam=12.0, n_servers=7)   # policy re-planned
+        snap = sim.snapshot("app0")               # occupancy-window start
+        sim.run_until(120.0)                      # epoch 1
+        epoch1 = sim.window_stats("app0", 60.0, 120.0, snap_start=snap)
+        sim.drain()                               # complete in-flight work
+        resp = sim.responses("app0", 60.0, 120.0)  # now drain-complete
+    """
+
+    def __init__(self, seed: int = 0):
+        self.t = 0.0
+        self.seed = int(seed)
+        self._heap: list[tuple] = []  # (t, seq, kind, name, aux)
+        self._seq = 0
+        self._clusters: dict[str, _Cluster] = {}
+
+    # ------------------------------------------------------------------ admin
+    def add_app(self, name: str, lam: float, mu: float, n_servers: int) -> None:
+        if name in self._clusters:
+            raise ValueError(f"app {name!r} already simulated")
+        if mu <= 0 or n_servers < 0:
+            raise ValueError(f"app {name!r}: need mu > 0 and n_servers >= 0")
+        cl = _Cluster(
+            name, lam, mu, n_servers,
+            arr_rng=_stream(self.seed, name, 17),
+            svc_rng=_stream(self.seed, name, 29),
+            t0=self.t,
+        )
+        self._clusters[name] = cl
+        self._push_arrival(cl)
+
+    def configure(
+        self,
+        name: str,
+        lam: float | None = None,
+        mu: float | None = None,
+        n_servers: int | None = None,
+    ) -> None:
+        """Reconfigure a cluster at the current instant, carrying in-flight
+        work (see module docstring for the exact semantics)."""
+        cl = self._cluster(name)
+        cl.advance(self.t)
+        if lam is not None and float(lam) != cl.lam:
+            cl.lam = float(lam)
+            cl.version += 1  # supersede the pending arrival (memorylessness)
+            cl._arr_buf = np.empty(0)
+            self._push_arrival(cl)
+        if mu is not None and float(mu) != cl.mu:
+            if mu <= 0:
+                raise ValueError(f"app {name!r}: mu must be > 0")
+            cl.mu = float(mu)  # in-service requests keep their old draw
+            cl._svc_buf = np.empty(0)
+        if n_servers is not None and int(n_servers) != cl.n_servers:
+            cl.n_servers = int(n_servers)
+            self._start_queued(cl)  # a grown cluster picks up waiting work NOW
+
+    def retire(self, name: str) -> None:
+        """Disable arrivals; the cluster drains its queue and in-flight work."""
+        cl = self._cluster(name)
+        cl.advance(self.t)
+        cl.active = False
+        cl.version += 1  # cancel the pending arrival event
+
+    def activate(self, name: str) -> None:
+        """Re-enable arrivals on a retired cluster (a tenant re-joining)."""
+        cl = self._cluster(name)
+        if cl.active:
+            return
+        cl.advance(self.t)
+        cl.active = True
+        cl.version += 1
+        self._push_arrival(cl)
+
+    def apps(self) -> list[str]:
+        return list(self._clusters)
+
+    # ------------------------------------------------------------- event loop
+    def run_until(self, t_end: float) -> None:
+        """Process every event with t <= t_end; leaves the clock at t_end."""
+        heap = self._heap
+        clusters = self._clusters
+        while heap and heap[0][0] <= t_end:
+            t, _, kind, name, aux = heapq.heappop(heap)
+            cl = clusters.get(name)
+            if cl is None:
+                continue
+            self.t = t
+            if kind == _ARRIVAL:
+                if aux != cl.version or not cl.active:
+                    continue  # superseded by a reconfig/retire
+                cl.advance(t)
+                cl.n_arrived += 1
+                self._push_arrival(cl)
+                if cl.busy < cl.n_servers:
+                    cl.busy += 1
+                    self._push_depart(cl, t_arr=t)
+                else:
+                    cl.queue.append(t)
+            else:  # departure
+                cl.advance(t)
+                cl.busy -= 1
+                cl.arr_log.append(aux)
+                cl.resp_log.append(t - aux)
+                self._start_queued(cl)
+        if np.isfinite(t_end):
+            self.t = max(self.t, t_end)
+
+    def drain(self) -> None:
+        """Stop all arrivals and run the fleet until every admitted request
+        has completed (so window stats never truncate slow responses)."""
+        for cl in self._clusters.values():
+            cl.version += 1  # cancel pending arrivals; active flag untouched
+        self.run_until(np.inf)
+
+    # -------------------------------------------------------------- internals
+    def _cluster(self, name: str) -> _Cluster:
+        try:
+            return self._clusters[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown app {name!r}; simulated: {', '.join(self._clusters)}"
+            ) from None
+
+    def _push(self, t: float, kind: int, name: str, aux) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, kind, name, aux))
+
+    def _push_arrival(self, cl: _Cluster) -> None:
+        if cl.active and cl.lam > 0.0:
+            self._push(self.t + cl.next_interarrival(), _ARRIVAL, cl.name, cl.version)
+
+    def _push_depart(self, cl: _Cluster, t_arr: float) -> None:
+        self._push(self.t + cl.next_service(), _DEPART, cl.name, t_arr)
+
+    def _start_queued(self, cl: _Cluster) -> None:
+        while cl.queue and cl.busy < cl.n_servers:
+            t_arr = cl.queue.popleft()
+            cl.busy += 1
+            self._push_depart(cl, t_arr=t_arr)
+
+    # ------------------------------------------------------------------ stats
+    def snapshot(self, name: str) -> tuple[float, float]:
+        """(qlen_integral, busy_time) extrapolated to the current clock —
+        difference two snapshots to integrate over a measurement window."""
+        cl = self._cluster(name)
+        dt = max(self.t - cl.last_t, 0.0)
+        return cl.qlen_integral + len(cl.queue) * dt, cl.busy_time + cl.busy * dt
+
+    def responses(self, name: str, t_start: float, t_end: float) -> np.ndarray:
+        """Response times of completed requests that ARRIVED in
+        [t_start, t_end) — run ``drain()`` first to avoid truncating the
+        window's slowest responses."""
+        cl = self._cluster(name)
+        arr = np.asarray(cl.arr_log, dtype=float)
+        resp = np.asarray(cl.resp_log, dtype=float)
+        mask = (arr >= t_start) & (arr < t_end)
+        return resp[mask]
+
+    def window_stats(
+        self,
+        name: str,
+        t_start: float,
+        t_end: float,
+        snap_start: tuple[float, float] | None = None,
+    ) -> SimStats:
+        """SimStats for one cluster over [t_start, t_end). The response-time
+        fields are exact for the window (mask on arrival time). The occupancy
+        integrals (mean_queue_len/utilization) additionally need a
+        ``snapshot()`` taken at t_start AND the clock still at t_end — without
+        ``snap_start`` they are reported as NaN rather than a silently
+        mis-windowed full-history average."""
+        cl = self._cluster(name)
+        resp = self.responses(name, t_start, t_end)
+        if snap_start is not None:
+            q1, b1 = self.snapshot(name)
+            q0, b0 = snap_start
+            dur = max(t_end - t_start, 1e-9)
+            n_srv = max(cl.n_servers, 1)
+            qlen = (q1 - q0) / dur
+            util = (b1 - b0) / (dur * n_srv)
+        else:
+            qlen = util = float("nan")
+        return SimStats(
+            n_completed=int(resp.shape[0]),
+            mean_response_s=float(np.mean(resp)) if resp.size else float("inf"),
+            p95_response_s=float(np.percentile(resp, 95)) if resp.size else float("inf"),
+            mean_queue_len=qlen,
+            utilization=util,
+        )
+
+
+# ----------------------------------------------------------------------------
+# Single-cluster / single-allocation views (back-compat entry points)
+# ----------------------------------------------------------------------------
 def simulate_mmn(
     lam: float,
     mu: float,
@@ -31,61 +326,58 @@ def simulate_mmn(
     warmup_s: float = 200.0,
     seed: int = 0,
 ) -> SimStats:
-    """Single M/M/N cluster. Response time = wait + service."""
-    rng = np.random.default_rng(seed)
-    t = 0.0
-    busy = 0
-    queue: list[float] = []  # arrival times of waiting requests
-    events: list[tuple[float, int, float]] = []  # (time, kind 0=arr 1=dep, arrival_time)
-    heapq.heappush(events, (rng.exponential(1.0 / lam), 0, 0.0))
-    responses: list[float] = []
-    busy_time = 0.0
-    qlen_integral = 0.0
-    last_t = 0.0
+    """Single M/M/N cluster (the B=1 fleet). Response time = wait + service.
 
-    while events:
-        t, kind, t_arr = heapq.heappop(events)
-        if t > horizon_s:
-            break
-        qlen_integral += len(queue) * (t - last_t)
-        busy_time += busy * (t - last_t)
-        last_t = t
-        if kind == 0:  # arrival
-            heapq.heappush(events, (t + rng.exponential(1.0 / lam), 0, 0.0))
-            if busy < n_servers:
-                busy += 1
-                heapq.heappush(events, (t + rng.exponential(1.0 / mu), 1, t))
-            else:
-                queue.append(t)
-        else:  # departure
-            if t_arr >= warmup_s:
-                responses.append(t - t_arr)
-            if queue:
-                t_next_arr = queue.pop(0)
-                heapq.heappush(events, (t + rng.exponential(1.0 / mu), 1, t_next_arr))
-            else:
-                busy -= 1
-
-    responses = np.asarray(responses)
-    dur = max(last_t, 1e-9)
-    return SimStats(
-        n_completed=len(responses),
-        mean_response_s=float(np.mean(responses)) if len(responses) else float("inf"),
-        p95_response_s=float(np.percentile(responses, 95)) if len(responses) else float("inf"),
-        mean_queue_len=qlen_integral / dur,
-        utilization=busy_time / (dur * n_servers),
+    All statistics — the response log AND the queue/utilization integrals —
+    exclude the [0, warmup_s) transient; arrivals inside the measurement
+    window are always completed (post-horizon drain), never truncated."""
+    sim = FleetSimulator(seed=seed)
+    sim.add_app("mmn", lam, mu, n_servers)
+    sim.run_until(warmup_s)
+    snap = sim.snapshot("mmn")
+    sim.run_until(horizon_s)
+    q1, b1 = sim.snapshot("mmn")
+    sim.drain()
+    resp = sim.responses("mmn", warmup_s, horizon_s)
+    dur = max(horizon_s - warmup_s, 1e-9)
+    stats = SimStats(
+        n_completed=int(resp.shape[0]),
+        mean_response_s=float(np.mean(resp)) if resp.size else float("inf"),
+        p95_response_s=float(np.percentile(resp, 95)) if resp.size else float("inf"),
+        mean_queue_len=(q1 - snap[0]) / dur,
+        utilization=(b1 - snap[1]) / (dur * max(int(n_servers), 1)),
     )
+    return stats
 
 
 def simulate_allocation(apps, allocation, horizon_s=2000.0, warmup_s=200.0, seed=0):
-    """Simulate every app cluster of an Allocation; returns per-app SimStats."""
+    """Simulate every app cluster of an Allocation in ONE fleet event loop;
+    returns per-app SimStats (same order as ``apps``)."""
     from repro.core.problem import service_rate
 
-    out = []
+    sim = FleetSimulator(seed=seed)
     for i, app in enumerate(apps):
         mu = float(service_rate(app, allocation.r_cpu[i], allocation.r_mem[i]))
+        sim.add_app(app.name, app.lam, mu, int(allocation.n[i]))
+    sim.run_until(warmup_s)
+    snaps = {a.name: sim.snapshot(a.name) for a in apps}
+    sim.run_until(horizon_s)
+    ends = {a.name: sim.snapshot(a.name) for a in apps}
+    sim.drain()
+    out = []
+    dur = max(horizon_s - warmup_s, 1e-9)
+    for i, app in enumerate(apps):
+        resp = sim.responses(app.name, warmup_s, horizon_s)
+        q0, b0 = snaps[app.name]
+        q1, b1 = ends[app.name]
         out.append(
-            simulate_mmn(app.lam, mu, int(allocation.n[i]), horizon_s, warmup_s, seed + i)
+            SimStats(
+                n_completed=int(resp.shape[0]),
+                mean_response_s=float(np.mean(resp)) if resp.size else float("inf"),
+                p95_response_s=float(np.percentile(resp, 95)) if resp.size else float("inf"),
+                mean_queue_len=(q1 - q0) / dur,
+                utilization=(b1 - b0) / (dur * max(int(allocation.n[i]), 1)),
+            )
         )
     return out
 
@@ -105,21 +397,40 @@ def run_quasi_dynamic(
     phase_len: float = 500.0,
     seed: int = 0,
 ):
-    """Replay a piecewise workload; the allocator is consulted at each phase
-    boundary (it may or may not re-optimize — QuasiDynamicAllocator decides).
-    Returns (per-phase mean response, reoptimization count trace)."""
-    results = []
+    """Replay a piecewise workload through ONE continuous fleet simulation;
+    the allocator is consulted at each phase boundary (it may or may not
+    re-optimize — the quasi-dynamic driver decides) and its chosen
+    (n, r_cpu, r_mem) is applied as a mid-run reconfiguration, so in-flight
+    work carries across the re-plan instead of restarting from empty.
+    Returns per-phase dicts of mean response / allocation."""
+    from repro.core.problem import service_rate
+
+    sim = FleetSimulator(seed=seed)
+    windows = []
     for k, phase in enumerate(phases):
         phase_apps = [a.with_lam(l) for a, l in zip(apps, phase.lam)]
         alloc = allocator(phase_apps)
-        stats = simulate_allocation(
-            phase_apps, alloc, horizon_s=phase_len, warmup_s=phase_len * 0.2, seed=seed + 97 * k
-        )
+        t0 = k * phase_len
+        for i, app in enumerate(phase_apps):
+            mu = float(service_rate(app, alloc.r_cpu[i], alloc.r_mem[i]))
+            if k == 0:
+                sim.add_app(app.name, app.lam, mu, int(alloc.n[i]))
+            else:
+                sim.configure(app.name, lam=app.lam, mu=mu, n_servers=int(alloc.n[i]))
+        sim.run_until(t0 + phase_len)
+        windows.append((phase, alloc, t0 + 0.2 * phase_len, t0 + phase_len))
+    sim.drain()
+    results = []
+    for phase, alloc, w0, w1 in windows:
+        mean_resp = []
+        for a in apps:
+            resp = sim.responses(a.name, w0, w1)
+            mean_resp.append(float(np.mean(resp)) if resp.size else float("inf"))
         results.append(
             {
                 "t": phase.t_start,
                 "lam": list(phase.lam),
-                "mean_response": [s.mean_response_s for s in stats],
+                "mean_response": mean_resp,
                 "alloc_n": alloc.n.tolist(),
             }
         )

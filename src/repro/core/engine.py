@@ -92,6 +92,16 @@ def _eq1_np(kappa: np.ndarray, c, m):
     return k1 / (1.0 - np.exp(-k2 * c)) + np.exp(k3 / m)
 
 
+def _alpha_arg(alpha):
+    """Normalize the latency weight: a scalar stays a python float (keeps the
+    historical jit trace), a per-app priority-weighted (M,) vector becomes a
+    float64 array — every objective/derivative expression in this module
+    multiplies alpha elementwise against per-app terms, so the vector form
+    broadcasts through the interior point, SP1 and the grid sweep unchanged."""
+    a = np.asarray(alpha, dtype=float)
+    return float(a) if a.ndim == 0 else a
+
+
 # ----------------------------------------------------------------------------
 # P1 objective / barrier (Theorem 4) — shared by serial and batched paths
 # ----------------------------------------------------------------------------
@@ -541,7 +551,10 @@ def grid_seed_chints(
     c_rep = np.tile(cg, (Kp, 1))
     m_rep = np.tile(mg, (Kp, 1))
 
-    use_oracle = backend == "oracle" or (
+    alpha = _alpha_arg(alpha)
+    # the Pallas kernel takes a scalar alpha; priority-weighted (vector-alpha)
+    # sweeps always route through the jnp oracle, which broadcasts per app
+    use_oracle = backend == "oracle" or np.ndim(alpha) > 0 or (
         backend in (None, "auto") and jax.default_backend() != "tpu"
     )
     if use_oracle:
@@ -554,7 +567,7 @@ def grid_seed_chints(
             jnp.asarray(m_rep),
             jnp.asarray(float(caps.r_cpu)),
             jnp.asarray(float(caps.power.span)),
-            float(alpha),
+            alpha,
             float(beta),
         )
     else:
@@ -571,7 +584,7 @@ def grid_seed_chints(
     # f32 Pallas kernel (emitted as alpha·1e9 + power term) — map both to inf
     # so argmin/fallback agree across backends; the threshold scales with
     # alpha so small latency weights don't slip the sentinel past the filter
-    thresh = max(float(alpha), 1e-3) * 1e8
+    thresh = max(float(np.max(alpha)), 1e-3) * 1e8
     terms = np.where(np.isfinite(terms) & (terms < thresh), terms, np.inf)
     gstar = np.argmin(terms, axis=1)  # (Kp, M) argmin cell per (count, app)
     cols = np.arange(M)
@@ -719,7 +732,7 @@ def p1_solve_batch(
         jnp.asarray(float(caps.r_cpu)),
         jnp.asarray(float(caps.r_mem)),
         jnp.asarray(float(caps.power.span)),
-        float(alpha),
+        _alpha_arg(alpha),
         float(beta),
         n_outer=n_outer,
         n_inner=n_inner,
@@ -783,7 +796,7 @@ def sp1_solve_batch(apps, caps: ServerCaps, alpha: float, beta: float, iters: in
         packed.as_dict(),
         jnp.asarray(float(caps.r_cpu)),
         jnp.asarray(float(caps.power.span)),
-        float(alpha),
+        _alpha_arg(alpha),
         float(beta),
         iters=iters,
     )
@@ -792,17 +805,18 @@ def sp1_solve_batch(apps, caps: ServerCaps, alpha: float, beta: float, iters: in
 
 @jax.jit
 def _phi_grid(lam, mu, c, power_span, caps_cpu, alpha, beta, ns):
-    """Φ(N) of Eq. (23) on an (M, K) grid of container counts."""
+    """Φ(N) of Eq. (23) on an (M, K) grid of container counts. ``alpha`` is a
+    per-app (M,) latency weight (a scalar is broadcast by the caller)."""
 
-    def per_app(lam_i, mu_i, c_i):
+    def per_app(lam_i, mu_i, c_i, alpha_i):
         def per_n(n):
             ws = queueing.erlang_ws(n, lam_i, mu_i)
             dp = power_span * n * c_i / caps_cpu
-            return alpha * ws + beta * dp / lam_i
+            return alpha_i * ws + beta * dp / lam_i
 
         return jax.vmap(per_n)(ns)
 
-    return jax.vmap(per_app)(lam, mu, c)
+    return jax.vmap(per_app)(lam, mu, c, alpha)
 
 
 def sp2_argmin_batch(apps, caps: ServerCaps, alpha, beta, mu_star, c_star, m_star):
@@ -821,6 +835,7 @@ def sp2_argmin_batch(apps, caps: ServerCaps, alpha, beta, mu_star, c_star, m_sta
     hi = np.minimum(np.maximum(hi, lo), queueing.MAX_SERVERS - 1)
     K = _pad_pow2(int(hi.max()))
     ns = jnp.arange(1, K + 1, dtype=jnp.float64)
+    alpha_vec = np.broadcast_to(_alpha_arg(alpha), packed.lam.shape)
     vals = np.asarray(
         _phi_grid(
             jnp.asarray(packed.lam),
@@ -828,7 +843,7 @@ def sp2_argmin_batch(apps, caps: ServerCaps, alpha, beta, mu_star, c_star, m_sta
             jnp.asarray(c_star),
             jnp.asarray(float(caps.power.span)),
             jnp.asarray(float(caps.r_cpu)),
-            float(alpha),
+            jnp.asarray(alpha_vec),
             float(beta),
             ns,
         )

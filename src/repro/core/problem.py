@@ -100,12 +100,18 @@ def utility(
     caps: ServerCaps,
     alpha: float,
     beta: float,
+    weights: Sequence[float] | None = None,
 ):
-    """Objective U_p of Eq. (8). Returns (U_p, per-app Ws, per-app ΔP)."""
+    """Objective U_p of Eq. (8). Returns (U_p, per-app Ws, per-app ΔP).
+
+    ``weights``: optional per-app priority weights w_i scaling the latency
+    term to α·w_i·Ws_i (the priority-weighted CRMS objective); None keeps
+    the paper's unweighted objective."""
     total = 0.0
     ws_all, dp_all = [], []
     for i, app in enumerate(apps):
-        ws, dp, term = app_terms(app, n[i], r_cpu[i], r_mem[i], caps, alpha, beta)
+        a_i = alpha if weights is None else alpha * float(weights[i])
+        ws, dp, term = app_terms(app, n[i], r_cpu[i], r_mem[i], caps, a_i, beta)
         ws_all.append(ws)
         dp_all.append(dp)
         total = total + term
@@ -135,9 +141,13 @@ def check_feasible(apps, n, r_cpu, r_mem, caps: ServerCaps, tol: float = 1e-6):
     }
 
 
-def evaluate(apps, n, r_cpu, r_mem, caps, alpha, beta) -> Allocation:
-    """Package a candidate solution with metrics + feasibility flags."""
-    u, ws, dp = utility(apps, np.asarray(n), np.asarray(r_cpu), np.asarray(r_mem), caps, alpha, beta)
+def evaluate(apps, n, r_cpu, r_mem, caps, alpha, beta, weights=None) -> Allocation:
+    """Package a candidate solution with metrics + feasibility flags.
+    ``weights`` (optional, per-app) selects the priority-weighted objective."""
+    u, ws, dp = utility(
+        apps, np.asarray(n), np.asarray(r_cpu), np.asarray(r_mem), caps, alpha, beta,
+        weights=weights,
+    )
     feas = check_feasible(apps, n, r_cpu, r_mem, caps)
     return Allocation(
         n=np.asarray(n, dtype=int),

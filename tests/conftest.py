@@ -45,7 +45,14 @@ except ImportError:
         def deco(fn):
             def wrapper():
                 rng = np.random.default_rng(0)
-                n_examples = min(getattr(fn, "_max_examples", 25), 25)
+                # @settings may sit above OR below @given in the stack: the
+                # attribute lands on whichever function it decorated
+                n_examples = min(
+                    getattr(
+                        wrapper, "_max_examples", getattr(fn, "_max_examples", 25)
+                    ),
+                    25,
+                )
                 items = sorted(strats.items())
                 # two boundary probes, then seeded uniform draws
                 fn(**{k: s.lo for k, s in items})

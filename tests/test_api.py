@@ -342,7 +342,7 @@ def test_schema_validator_rejects_corrupt_documents():
     doc = ScenarioRunner(sc, ["drf"]).run()
     validate_scenarios_doc(doc)
 
-    bad = {**doc, "schema_version": 2}
+    bad = {**doc, "schema_version": 1}  # the pre-DES-backend schema
     with pytest.raises(ValueError, match="schema_version"):
         validate_scenarios_doc(bad)
 

@@ -1,9 +1,19 @@
-"""Discrete-event simulator vs analytic Erlang-C (validates Eq. 7)."""
+"""Fleet discrete-event simulator vs analytic Erlang-C (validates Eq. 7),
+plus the fleet-specific machinery: mid-run reconfiguration carrying in-flight
+work, retire/rejoin, common-random-number arrivals and warmup-correct
+integrals."""
 import numpy as np
 import pytest
 
-from repro.core.des import WorkloadPhase, run_quasi_dynamic, simulate_allocation, simulate_mmn
-from repro.core.queueing import erlang_ws_np
+from conftest import given, settings, st
+from repro.core.des import (
+    FleetSimulator,
+    WorkloadPhase,
+    run_quasi_dynamic,
+    simulate_allocation,
+    simulate_mmn,
+)
+from repro.core.queueing import erlang_ws_np, stability_lower_bound
 
 
 @pytest.mark.parametrize(
@@ -32,6 +42,111 @@ def test_simulate_allocation_end_to_end():
     stats = simulate_allocation(apps, alloc, horizon_s=1500.0, seed=3)
     for st, ws in zip(stats, alloc.ws):
         assert st.mean_response_s == pytest.approx(ws, rel=0.2)
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(lam=st.floats(3.0, 14.0), mu=st.floats(1.2, 4.0), headroom=st.integers(1, 4))
+def test_des_converges_to_erlang_ws(lam, mu, headroom):
+    """Property (seeded): the fleet DES mean response converges to the
+    analytic Erlang-C Ws of Eq. (7) across a (λ, μ, N) grid — the
+    cross-validation the paper runs against its SimPy harness. N is the
+    stability floor plus headroom, so every sampled system is stable."""
+    n = stability_lower_bound(lam, mu) + headroom
+    s = simulate_mmn(lam, mu, n, horizon_s=6000.0, warmup_s=500.0, seed=1234)
+    w = erlang_ws_np(n, lam, mu)
+    assert np.isfinite(w)
+    assert s.mean_response_s == pytest.approx(w, rel=0.12)
+
+
+def test_warmup_excluded_from_integrals():
+    """Satellite fix: mean_queue_len/utilization must integrate over the
+    measurement window only. A near-saturated prelude before the snapshot
+    must not contaminate the quiet window's occupancy statistics — the
+    from-zero average visibly would."""
+    mu, n = 1.6, 8
+    sim = FleetSimulator(seed=5)
+    sim.add_app("a", lam=11.5, mu=mu, n_servers=n)  # rho ~0.9: busy prelude
+    sim.run_until(400.0)
+    sim.configure("a", lam=2.0)  # drop to a quiet steady state (rho ~0.16)
+    sim.run_until(500.0)  # settle
+    snap = sim.snapshot("a")
+    sim.run_until(1500.0)
+    q1, b1 = sim.snapshot("a")
+    util_window = (b1 - snap[1]) / (1000.0 * n)
+    util_from_zero = b1 / (sim.t * n)
+    assert util_window == pytest.approx(2.0 / (mu * n), rel=0.15)
+    assert util_from_zero > 1.5 * util_window  # the bias the fix removes
+    # and the simulate_mmn wrapper applies exactly this windowing
+    long = simulate_mmn(10.0, mu, n, horizon_s=4000.0, warmup_s=400.0, seed=5)
+    assert long.utilization == pytest.approx(10.0 / (mu * n), rel=0.05)
+
+
+def test_fleet_reconfigure_carries_inflight_work():
+    """Mid-run reconfiguration: a cluster that is under-provisioned builds a
+    queue; growing n_servers at an 'epoch boundary' must drain the backlog
+    without dropping requests (every admitted arrival eventually completes)."""
+    sim = FleetSimulator(seed=3)
+    sim.add_app("hot", lam=6.0, mu=1.0, n_servers=4)  # rho=1.5: queue builds
+    sim.run_until(120.0)
+    assert sim.snapshot("hot")[0] > 0.0  # backlog accumulated
+    sim.configure("hot", n_servers=12)  # re-plan: scale out, same mu
+    sim.run_until(400.0)
+    sim.drain()
+    cl = sim._clusters["hot"]
+    assert len(cl.queue) == 0 and cl.busy == 0  # backlog fully drained
+    assert len(cl.resp_log) == cl.n_arrived  # nothing lost across the reconfig
+    early = sim.responses("hot", 0.0, 120.0)
+    late = sim.responses("hot", 250.0, 400.0)
+    # congested-phase arrivals waited; post-scale-out arrivals are near 1/mu
+    assert np.mean(early) > np.mean(late)
+    assert np.mean(late) == pytest.approx(1.0 / 1.0, rel=0.35)
+
+
+def test_fleet_mu_change_preserves_inflight_service():
+    """A mu reconfiguration applies to NEW service starts only; the observed
+    post-change mean response tracks the new rate."""
+    sim = FleetSimulator(seed=11)
+    sim.add_app("a", lam=4.0, mu=2.0, n_servers=8)
+    sim.run_until(500.0)
+    sim.configure("a", mu=4.0)
+    sim.run_until(1500.0)
+    sim.drain()
+    before = sim.responses("a", 100.0, 500.0)
+    after = sim.responses("a", 600.0, 1500.0)
+    assert np.mean(before) == pytest.approx(erlang_ws_np(8, 4.0, 2.0), rel=0.15)
+    assert np.mean(after) == pytest.approx(erlang_ws_np(8, 4.0, 4.0), rel=0.15)
+
+
+def test_fleet_retire_and_rejoin():
+    sim = FleetSimulator(seed=7)
+    sim.add_app("t", lam=5.0, mu=2.0, n_servers=5)
+    sim.add_app("u", lam=3.0, mu=2.0, n_servers=3)
+    sim.run_until(200.0)
+    sim.retire("t")
+    sim.run_until(400.0)
+    n_after_retire = sim._clusters["t"].n_arrived
+    sim.run_until(600.0)
+    assert sim._clusters["t"].n_arrived == n_after_retire  # no arrivals while retired
+    assert sim._clusters["u"].n_arrived > 0
+    sim.activate("t")
+    sim.run_until(800.0)
+    assert sim._clusters["t"].n_arrived > n_after_retire  # re-joined
+    sim.drain()
+    assert len(sim._clusters["t"].resp_log) == sim._clusters["t"].n_arrived
+
+
+def test_fleet_common_random_number_arrivals():
+    """Two replays with the same seed see the same arrival process per app
+    even when their allocations (mu, n) differ — the property that makes
+    cross-policy DES comparisons paired rather than independent."""
+    a = FleetSimulator(seed=42)
+    a.add_app("x", lam=8.0, mu=2.0, n_servers=6)
+    b = FleetSimulator(seed=42)
+    b.add_app("x", lam=8.0, mu=3.5, n_servers=3)  # different service dynamics
+    a.run_until(300.0)
+    b.run_until(300.0)
+    assert a._clusters["x"].n_arrived == b._clusters["x"].n_arrived
 
 
 def test_quasi_dynamic_driver():

@@ -1,0 +1,228 @@
+"""Closed-loop simulation subsystem: the ScenarioRunner DES backend, the
+scenario trace library, priority weights through SolverOptions, the
+predictive re-planner, and the schema-v2 gate."""
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    AllocRequest,
+    PredictivePolicy,
+    Scenario,
+    ScenarioRunner,
+    SolverOptions,
+    get_policy,
+    list_policies,
+    validate_scenarios_doc,
+)
+from repro.core.crms import crms
+from repro.core.problem import ServerCaps
+from repro.core.profiler import make_paper_apps
+
+CAPS = ServerCaps(30.0, 10.0)
+
+
+@pytest.fixture(scope="module")
+def apps():
+    return make_paper_apps(lam=(8, 7, 10, 15), fitted=False)
+
+
+# ----------------------------------------------------------------------------
+# SolverOptions.app_weights
+# ----------------------------------------------------------------------------
+def test_app_weights_normalization():
+    o = SolverOptions(app_weights={"b": 2.0, "a": 1.5})
+    assert o.app_weights == (("a", 1.5), ("b", 2.0))  # sorted tuple, hash-safe
+    assert o.weight_vector(["a", "b", "c"]).tolist() == [1.5, 2.0, 1.0]
+    assert SolverOptions().weight_vector(["a"]) is None
+    with pytest.raises(ValueError):
+        SolverOptions(app_weights={"a": 0.0})
+    with pytest.raises(ValueError):
+        SolverOptions(app_weights={"a": -1.0})
+
+
+def test_weighted_crms_shifts_latency_toward_priority_app(apps):
+    base = crms(apps, CAPS, 1.4, 0.2)
+    prio = apps[3].name
+    wal = crms(apps, CAPS, 1.4, 0.2, options=SolverOptions(app_weights={prio: 6.0}))
+    assert wal.feasible and wal.stable
+    assert wal.meta["app_weights"][prio] == 6.0
+    # the prioritized tenant's response time must not get worse, and the
+    # weighted solution must genuinely differ from the unweighted one
+    assert wal.ws[3] <= base.ws[3] + 1e-9
+    assert not np.allclose(wal.ws, base.ws)
+
+
+def test_crms_policy_strips_weights_crms_priority_applies_them(apps):
+    opts = SolverOptions(app_weights={apps[3].name: 6.0})
+    req = AllocRequest(apps=apps, caps=CAPS, options=opts)
+    plain = get_policy("crms").allocate(req)
+    weighted = get_policy("crms_priority").allocate(req)
+    unweighted_ref = crms(apps, CAPS, 1.4, 0.2)
+    assert np.allclose(plain.allocation.ws, unweighted_ref.ws)  # paper objective kept
+    assert weighted.allocation.ws[3] <= plain.allocation.ws[3] + 1e-9
+    assert not np.allclose(weighted.allocation.ws, plain.allocation.ws)
+
+
+# ----------------------------------------------------------------------------
+# Predictive re-planner
+# ----------------------------------------------------------------------------
+def test_predictive_replans_ahead_of_threshold(apps):
+    """A rising trend whose per-step drift stays UNDER the threshold: the
+    reactive QD driver would wait, the predictive one re-plans early."""
+    pol = PredictivePolicy("crms", threshold=0.15)
+    steps = [1.0, 1.11, 1.23]  # +11% per epoch; forecast crosses 15% at step 1
+    results = []
+    for f in steps:
+        req = AllocRequest(
+            apps=[a.with_lam(a.lam * f) for a in apps], caps=ServerCaps(39.0, 13.0)
+        )
+        results.append(pol.allocate(req))
+    assert not results[0].diagnostics.cache_hit
+    assert not results[1].diagnostics.cache_hit  # predictive: ahead of threshold
+    assert pol.reoptimizations >= 2
+    for r in results:
+        assert r.feasible and r.stable  # fallback guarantees reactive quality
+        assert r.policy == "predictive:crms"
+    pol.reset()
+    assert pol.reoptimizations == 0 and pol._result is None
+
+
+def test_predictive_registered_and_self_caching():
+    pol = get_policy("predictive_crms")
+    assert pol.name == "predictive_crms"
+    assert getattr(pol, "self_caching", False)
+    assert {"crms_priority", "predictive_crms"} <= set(list_policies())
+
+
+# ----------------------------------------------------------------------------
+# Scenario trace library
+# ----------------------------------------------------------------------------
+def test_burst_constructor_timeline(apps):
+    sc = Scenario.burst(
+        apps, CAPS, n_epochs=6, app=apps[2].name, factor=2.0, start=2, length=2
+    )
+    tl = sc.timeline()
+    base = apps[2].lam
+    assert tl[1].apps[2].lam == pytest.approx(base)
+    assert tl[2].apps[2].lam == pytest.approx(base * 2.0)
+    assert tl[3].apps[2].lam == pytest.approx(base * 2.0)
+    assert tl[4].apps[2].lam == pytest.approx(base)  # reverted
+    # other tenants untouched
+    assert tl[2].apps[0].lam == pytest.approx(apps[0].lam)
+
+
+def test_failover_constructor_timeline(apps):
+    sc = Scenario.failover(apps, CAPS, n_epochs=6, drop=0.25, start=2, recovery=4)
+    tl = sc.timeline()
+    assert tl[1].caps.r_cpu == pytest.approx(CAPS.r_cpu)
+    assert tl[2].caps.r_cpu == pytest.approx(CAPS.r_cpu * 0.75)
+    assert tl[3].caps.r_mem == pytest.approx(CAPS.r_mem * 0.75)
+    assert tl[4].caps.r_cpu == pytest.approx(CAPS.r_cpu)  # recovered
+
+
+def test_diurnal_constructor_common_mode(apps):
+    sc = Scenario.diurnal(apps, CAPS, n_epochs=8, amplitude=0.2, jitter=0.0)
+    tl = sc.timeline()
+    peak = tl[2]  # quarter period of the sinusoid
+    factors = [ea.lam / a.lam for ea, a in zip(peak.apps, apps)]
+    # common-mode: every tenant swings by the same factor, at the peak
+    assert max(factors) == pytest.approx(min(factors), rel=1e-9)
+    assert factors[0] == pytest.approx(1.2, abs=1e-9)
+
+
+def test_priority_constructor_carries_weights(apps):
+    sc = Scenario.priority_tenants(apps, CAPS, weight=5.0)
+    heaviest = max(apps, key=lambda a: a.lam).name
+    assert dict(sc.options.app_weights) == {heaviest: 5.0}
+
+
+# ----------------------------------------------------------------------------
+# ScenarioRunner DES backend + schema v2
+# ----------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def des_doc(apps):
+    sc = Scenario(
+        name="unit_des", apps=tuple(apps), caps=CAPS, n_epochs=2, seed=3
+    )
+    runner = ScenarioRunner(sc, ["crms"], backend="des", epoch_s=25.0)
+    return runner.run()
+
+
+def test_des_backend_reports_achieved_latency(des_doc):
+    validate_scenarios_doc(des_doc)
+    assert des_doc["backend"] == "des"
+    for rec in des_doc["policies"]["crms"]["epochs"]:
+        assert rec["achieved_mean_s"] is not None
+        assert rec["achieved_p95_s"] >= rec["achieved_mean_s"]
+        assert rec["predicted_mean_s"] is not None
+        assert rec["latency_gap_rel"] is not None
+    summary = des_doc["policies"]["crms"]["summary"]
+    assert summary["achieved_mean_s"] is not None
+    assert summary["mean_gap_rel"] is not None
+    # short windows are noisy; the model and the simulator must still agree
+    # to well within the CI gate
+    assert summary["mean_gap_rel"] < 0.25
+
+
+def test_analytic_backend_keeps_achieved_null(apps):
+    sc = Scenario(name="unit_analytic", apps=tuple(apps), caps=CAPS, n_epochs=2)
+    doc = ScenarioRunner(sc, ["crms"], backend="analytic").run()
+    validate_scenarios_doc(doc)
+    for rec in doc["policies"]["crms"]["epochs"]:
+        assert rec["achieved_mean_s"] is None
+        assert rec["latency_gap_rel"] is None
+
+
+def test_runner_rejects_unknown_backend(apps):
+    sc = Scenario(name="x", apps=tuple(apps), caps=CAPS, n_epochs=1)
+    with pytest.raises(ValueError):
+        ScenarioRunner(sc, ["crms"], backend="simpy")
+
+
+def test_validator_schema_v2(des_doc):
+    # bundle form
+    bundle = {
+        "schema_version": 2,
+        "backend": "des",
+        "scenarios": {"unit_des": copy.deepcopy(des_doc)},
+    }
+    validate_scenarios_doc(bundle)
+    # bundle key must match the scenario name
+    bad = copy.deepcopy(bundle)
+    bad["scenarios"]["renamed"] = bad["scenarios"].pop("unit_des")
+    with pytest.raises(ValueError, match="scenario.name"):
+        validate_scenarios_doc(bad)
+    # backend mismatch between bundle and member
+    bad = copy.deepcopy(bundle)
+    bad["backend"] = "analytic"
+    with pytest.raises(ValueError, match="backend"):
+        validate_scenarios_doc(bad)
+    # a zero-completion epoch may be null (both fields together)...
+    ok = copy.deepcopy(des_doc)
+    ok["policies"]["crms"]["epochs"][0]["achieved_mean_s"] = None
+    ok["policies"]["crms"]["epochs"][0]["achieved_p95_s"] = None
+    validate_scenarios_doc(ok)
+    # ...but not mean/p95 inconsistently, and not EVERY epoch
+    bad = copy.deepcopy(des_doc)
+    bad["policies"]["crms"]["epochs"][0]["achieved_mean_s"] = None
+    with pytest.raises(ValueError, match="null together"):
+        validate_scenarios_doc(bad)
+    bad = copy.deepcopy(des_doc)
+    for rec in bad["policies"]["crms"]["epochs"]:
+        rec["achieved_mean_s"] = None
+        rec["achieved_p95_s"] = None
+    with pytest.raises(ValueError, match="at least one epoch"):
+        validate_scenarios_doc(bad)
+    # analytic docs must NOT carry achieved latency
+    bad = copy.deepcopy(des_doc)
+    bad["backend"] = "analytic"
+    with pytest.raises(ValueError, match="null under the analytic backend"):
+        validate_scenarios_doc(bad)
+    # weights must be positive numbers
+    bad = copy.deepcopy(des_doc)
+    bad["scenario"]["app_weights"] = {"a": -1.0}
+    with pytest.raises(ValueError, match="app_weights"):
+        validate_scenarios_doc(bad)
