@@ -1,8 +1,8 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV lines
 # (plus human-readable detail) for: Table I, Figs 2-3, 6-10, 11-14, 15-22, the
 # M/M/N validation, the solver throughput sweep, the quasi-dynamic trace, the
-# cross-policy scenario matrix, the TPU fleet benchmark and the roofline
-# report.
+# cross-policy scenario matrix, the DES engine throughput gate, the TPU fleet
+# benchmark and the roofline report.
 #
 # CLI filters (CI and local runs can execute a single section):
 #   --only <section>[,<section>...]   run only the named sections (repeatable)
@@ -31,9 +31,19 @@ SECTIONS = (
     "solver_throughput",
     "quasidynamic_trace",
     "scenarios",
+    "des_throughput",
     "fleet_tpu",
     "roofline_report",
 )
+
+# Expected artifact files per section, so CI gates and docs can read the
+# mapping from --list instead of hard-coding BENCH_*.json names.
+ARTIFACTS = {
+    "solver_throughput": ("BENCH_solver.json",),
+    "quasidynamic_trace": ("BENCH_quasidynamic.json",),
+    "scenarios": ("BENCH_scenarios.json",),
+    "des_throughput": ("BENCH_des.json",),
+}
 
 
 def main(argv=None) -> None:
@@ -62,9 +72,10 @@ def main(argv=None) -> None:
     if args.list:
         from repro.api import list_policies
 
-        print("benchmark sections:")
+        print("benchmark sections (with expected artifacts):")
         for name in SECTIONS:
-            print(f"  {name}")
+            arts = ", ".join(ARTIFACTS.get(name, ())) or "-"
+            print(f"  {name:24s} {arts}")
         print("registered policies (repro.api.registry):")
         for name in list_policies():
             print(f"  {name}")

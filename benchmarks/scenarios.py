@@ -27,7 +27,8 @@ point — so stability only gates the CRMS family. SNFC is selectable via
 point it honestly reports infeasible (the §VI SNFC pathology).
 
 CLI:  PYTHONPATH=src:. python -m benchmarks.scenarios
-      [--backend analytic|des] [--scenarios burst,failover,...]
+      [--backend analytic|des] [--des-engine event|vector]
+      [--scenarios burst,failover,...]
       [--policies crms,predictive_crms,...] [--epochs N] [--epoch-s SEC]
       [--smoke]
 """
@@ -35,7 +36,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import sys
 from pathlib import Path
 
@@ -52,6 +52,8 @@ from repro.api import (
     LambdaDrift,
     Scenario,
     ScenarioRunner,
+    compact_scenarios_doc,
+    dumps_scenarios_doc,
     validate_scenarios_doc,
 )
 from repro.core.problem import ServerCaps
@@ -155,6 +157,7 @@ def run(
     epoch_s: float = EPOCH_S,
     smoke: bool = False,
     out: Path = OUT,
+    des_engine: str = "event",
 ) -> bool:
     if smoke:
         selected = {"smoke": smoke_scenario()}
@@ -173,13 +176,15 @@ def run(
     ok = True
     for name, scenario in selected.items():
         runner = ScenarioRunner(
-            scenario, policies, extra=POLICY_EXTRA, backend=backend, epoch_s=epoch_s
+            scenario, policies, extra=POLICY_EXTRA, backend=backend,
+            epoch_s=epoch_s, des_engine=des_engine,
         )
         sub = runner.run()
         doc["scenarios"][name] = sub
 
         print(f"\nscenario {name}: {scenario.n_epochs} epochs, "
-              f"{len(scenario.events)} events, backend={backend}, "
+              f"{len(scenario.events)} events, backend={backend}"
+              f"{f' (engine={des_engine})' if backend == 'des' else ''}, "
               f"policies: {', '.join(sub['policies'])}")
         print(f"{'policy':16s} {'replans':>7s} {'replan_s':>9s} {'pred_s':>8s} "
               f"{'achieved_s':>10s} {'gap':>6s} {'power_W':>8s} {'feas':>5s} {'stable':>6s}")
@@ -207,7 +212,11 @@ def run(
                 ok &= gap_ok
 
     validate_scenarios_doc(doc)
-    out.write_text(json.dumps(doc, indent=2) + "\n")
+    # persist the compact parallel-array shape (schema 2.1) — same data,
+    # a fraction of the lines; the validator gates both shapes
+    compact = compact_scenarios_doc(doc)
+    validate_scenarios_doc(compact)
+    out.write_text(dumps_scenarios_doc(compact) + "\n")
 
     # headline row: CRMS on the first scenario when present
     first = next(iter(doc["scenarios"].values()))
@@ -229,6 +238,9 @@ def main(argv=None) -> int:
                     help="comma-separated scenario names (default: whole library)")
     ap.add_argument("--backend", default="analytic", choices=("analytic", "des"),
                     help="evaluation backend: analytic model or fleet DES replay")
+    ap.add_argument("--des-engine", default="event", choices=("event", "vector"),
+                    help="DES implementation: heapq event loop or the "
+                         "Kiefer-Wolfowitz vectorized segment fast path")
     ap.add_argument("--epochs", type=int, default=N_EPOCHS)
     ap.add_argument("--epoch-s", type=float, default=EPOCH_S,
                     help="simulated seconds per decision epoch (des backend)")
@@ -246,6 +258,7 @@ def main(argv=None) -> int:
         backend=args.backend,
         epoch_s=args.epoch_s,
         smoke=args.smoke,
+        des_engine=args.des_engine,
     ) else 1
 
 

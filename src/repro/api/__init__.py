@@ -49,6 +49,9 @@ _EXPORTS = {
     "CapResize": "repro.api.scenario",
     "ScenarioEvent": "repro.api.scenario",
     "validate_scenarios_doc": "repro.api.scenario",
+    "compact_scenarios_doc": "repro.api.scenario",
+    "expand_scenarios_doc": "repro.api.scenario",
+    "dumps_scenarios_doc": "repro.api.scenario",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -375,12 +375,15 @@ def _predicted_mean_s(apps: Sequence[App], alloc) -> float:
 class _DesReplay:
     """Replay one policy's trace through the fleet DES: each epoch's arrivals
     run against the allocation the policy actually chose, with epoch-boundary
-    reconfiguration carrying in-flight work across re-plans."""
+    reconfiguration carrying in-flight work across re-plans. ``engine``
+    selects the heapq oracle ("event") or the Kiefer–Wolfowitz segment fast
+    path ("vector") — epoch boundaries are exactly the segment boundaries the
+    vector engine hands off at."""
 
-    def __init__(self, seed: int, epoch_s: float):
+    def __init__(self, seed: int, epoch_s: float, engine: str = "event"):
         from repro.core.des import FleetSimulator
 
-        self.sim = FleetSimulator(seed=seed)
+        self.sim = FleetSimulator(seed=seed, engine=engine)
         self.epoch_s = float(epoch_s)
         self._present: dict[int, list[str]] = {}  # epoch -> app names simulated
         self._live: set[str] = set()  # names currently receiving arrivals
@@ -424,6 +427,7 @@ class _DesReplay:
 
 
 _BACKENDS = ("analytic", "des")
+_DES_ENGINES = ("event", "vector")
 
 
 class ScenarioRunner:
@@ -446,6 +450,10 @@ class ScenarioRunner:
       (``epoch_s`` simulated seconds per decision epoch, common-random-number
       arrivals across policies) and record the *achieved* mean/p95 latency
       next to the model's prediction, plus their relative gap per epoch.
+      ``des_engine`` picks the simulator implementation: the ``"event"``
+      heapq oracle or the ``"vector"`` Kiefer–Wolfowitz segment fast path
+      (same CRN streams, ~20x+ the throughput — what makes long diurnal
+      traces at realistic rates affordable).
     """
 
     def __init__(
@@ -456,9 +464,14 @@ class ScenarioRunner:
         extra: Mapping[str, Mapping[str, Any]] | None = None,
         backend: str = "analytic",
         epoch_s: float = 60.0,
+        des_engine: str = "event",
     ):
         if backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+        if des_engine not in _DES_ENGINES:
+            raise ValueError(
+                f"des_engine must be one of {_DES_ENGINES}, got {des_engine!r}"
+            )
         if epoch_s <= 0:
             raise ValueError(f"epoch_s must be > 0, got {epoch_s}")
         self.scenario = scenario
@@ -467,6 +480,7 @@ class ScenarioRunner:
         self.extra = dict(extra or {})
         self.backend = backend
         self.epoch_s = float(epoch_s)
+        self.des_engine = des_engine
 
     def _driver(self, policy: Policy) -> Policy:
         if getattr(policy, "self_caching", False) or not self.quasi_dynamic:
@@ -500,13 +514,14 @@ class ScenarioRunner:
                 "qd_threshold": sc.options.qd_threshold,
                 "app_weights": dict(sc.options.app_weights),
                 "epoch_s": self.epoch_s,
+                "des_engine": self.des_engine,
             },
             "policies": {},
         }
         for policy in self.policies:
             driver = self._driver(policy)
             replay = (
-                _DesReplay(seed=sc.seed, epoch_s=self.epoch_s)
+                _DesReplay(seed=sc.seed, epoch_s=self.epoch_s, engine=self.des_engine)
                 if self.backend == "des"
                 else None
             )
@@ -589,6 +604,120 @@ class ScenarioRunner:
 
 
 # ----------------------------------------------------------------------------
+# Compact storage shape (schema 2.1): per-epoch series as parallel arrays
+# ----------------------------------------------------------------------------
+SCHEMA_MINOR = 1
+
+
+def compact_scenarios_doc(doc: Mapping) -> dict:
+    """Return a copy storing each policy's per-epoch series as compact
+    parallel arrays (``epochs_columns: {field: [v0, v1, ...]}``) instead of
+    one object per epoch, and stamping ``schema_minor``. The row shape made
+    BENCH_scenarios.json ~5k lines of repeated keys; the column shape is the
+    same data at a fraction of the size. ``validate_scenarios_doc`` accepts
+    both shapes; ``expand_scenarios_doc`` is the inverse."""
+
+    def one(sub: Mapping) -> dict:
+        out = dict(sub)
+        out["schema_minor"] = SCHEMA_MINOR
+        pols = {}
+        for name, pol in sub["policies"].items():
+            p = dict(pol)
+            rows = p.pop("epochs")
+            # required fields first, then any extra keys the rows carry —
+            # compaction must be lossless (expand is the inverse)
+            keys = dict.fromkeys(_EPOCH_FIELDS)
+            for rec in rows:
+                keys.update(dict.fromkeys(rec))
+            p["epochs_columns"] = {
+                key: [rec.get(key) for rec in rows] for key in keys
+            }
+            pols[name] = p
+        out["policies"] = pols
+        return out
+
+    if "scenarios" in doc:
+        out = dict(doc)
+        out["schema_minor"] = SCHEMA_MINOR
+        out["scenarios"] = {k: one(v) for k, v in doc["scenarios"].items()}
+        return out
+    return one(doc)
+
+
+def _rows_from_columns(cols: Mapping) -> list[dict]:
+    n = max((len(v) for v in cols.values()), default=0)
+    return [{key: cols[key][i] for key in cols} for i in range(n)]
+
+
+def expand_scenarios_doc(doc: Mapping) -> dict:
+    """Inverse of ``compact_scenarios_doc``: reconstruct per-epoch row dicts
+    from the parallel-array shape (no-op for row-shaped documents)."""
+
+    def one(sub: Mapping) -> dict:
+        out = dict(sub)
+        pols = {}
+        for name, pol in sub["policies"].items():
+            p = dict(pol)
+            cols = p.pop("epochs_columns", None)
+            if cols is not None and "epochs" not in p:
+                p["epochs"] = _rows_from_columns(cols)
+            pols[name] = p
+        out["policies"] = pols
+        return out
+
+    if "scenarios" in doc:
+        out = dict(doc)
+        out["scenarios"] = {k: one(v) for k, v in doc["scenarios"].items()}
+        return out
+    return one(doc)
+
+
+def _scalar_series(obj) -> bool:
+    """True for a (possibly nested) list holding no objects — a data series
+    that reads fine on one line (e.g. the per-epoch events column)."""
+    if isinstance(obj, Mapping):
+        return False
+    if isinstance(obj, (list, tuple)):
+        return all(_scalar_series(v) for v in obj)
+    return True
+
+
+def _as_lists(obj):
+    if isinstance(obj, (list, tuple)):
+        return [_as_lists(v) for v in obj]
+    return obj
+
+
+def dumps_scenarios_doc(doc: Mapping, indent: int = 2) -> str:
+    """JSON text with object-free arrays inlined on one line. Plain
+    ``json.dumps(..., indent=2)`` prints one array element per line, which
+    would hand the compact column shape right back its 5k lines."""
+    import json
+
+    def render(obj, level: int) -> str:
+        pad = " " * (indent * level)
+        inner = " " * (indent * (level + 1))
+        if isinstance(obj, Mapping):
+            if not obj:
+                return "{}"
+            items = ",\n".join(
+                f"{inner}{json.dumps(str(k))}: {render(v, level + 1)}"
+                for k, v in obj.items()
+            )
+            return "{\n" + items + "\n" + pad + "}"
+        if isinstance(obj, (list, tuple)):
+            if not obj:
+                return "[]"
+            if _scalar_series(obj):
+                return json.dumps(_as_lists(obj))
+            items = ",\n".join(f"{inner}{render(v, level + 1)}" for v in obj)
+            return "[\n" + items + "\n" + pad + "]"
+        return json.dumps(obj)
+
+    return render(doc, 0)
+
+
+# ----------------------------------------------------------------------------
 # Schema gate (dependency-free — the container has no jsonschema)
 # ----------------------------------------------------------------------------
 _EPOCH_FIELDS = {
@@ -636,6 +765,13 @@ def _validate_one(doc: Mapping, root: str = "$") -> None:
     need = _need
     need(isinstance(doc, Mapping), root, "document must be an object")
     need(doc.get("schema_version") == 2, f"{root}.schema_version", "must be 2")
+    if "schema_minor" in doc:
+        need(
+            isinstance(doc["schema_minor"], int) and not isinstance(doc["schema_minor"], bool)
+            and 0 <= doc["schema_minor"] <= SCHEMA_MINOR,
+            f"{root}.schema_minor",
+            f"must be an int in [0, {SCHEMA_MINOR}]",
+        )
     backend = doc.get("backend")
     need(backend in _BACKENDS, f"{root}.backend", f"must be one of {_BACKENDS}")
     sc = doc.get("scenario")
@@ -650,6 +786,12 @@ def _validate_one(doc: Mapping, root: str = "$") -> None:
     ):
         tn = typ.__name__ if isinstance(typ, type) else str(typ)
         need(isinstance(sc.get(key), typ), f"{root}.scenario.{key}", f"must be {tn}")
+    if "des_engine" in sc:  # added with the vector fast path; absent pre-2.1
+        need(
+            sc["des_engine"] in _DES_ENGINES,
+            f"{root}.scenario.des_engine",
+            f"must be one of {_DES_ENGINES}",
+        )
     for wname, wval in sc["app_weights"].items():
         need(
             isinstance(wval, (int, float)) and wval > 0,
@@ -662,6 +804,21 @@ def _validate_one(doc: Mapping, root: str = "$") -> None:
         base = f"{root}.policies.{name}"
         need(isinstance(pol, Mapping), base, "must be an object")
         epochs = pol.get("epochs")
+        if epochs is None and isinstance(pol.get("epochs_columns"), Mapping):
+            # compact shape (schema 2.1): parallel arrays, one per field
+            cols = pol["epochs_columns"]
+            need(
+                set(cols) >= set(_EPOCH_FIELDS),
+                f"{base}.epochs_columns",
+                f"must include the per-epoch fields {sorted(_EPOCH_FIELDS)}",
+            )
+            for key, col in cols.items():
+                need(
+                    isinstance(col, list) and len(col) == sc["n_epochs"],
+                    f"{base}.epochs_columns.{key}",
+                    f"must be a list of {sc['n_epochs']} entries",
+                )
+            epochs = _rows_from_columns(cols)
         need(isinstance(epochs, list), f"{base}.epochs", "must be a list")
         need(
             len(epochs) == sc["n_epochs"],

@@ -29,11 +29,23 @@ Design points (DESIGN.md §10):
   read via ``snapshot()`` at arbitrary instants and differenced over the
   measurement window, so ``mean_queue_len``/``utilization`` exclude the
   warmup transient exactly like the response-time log does.
+* **Two engines, one contract** — ``FleetSimulator(engine="event")`` is the
+  heapq reference oracle in this module; ``engine="vector"`` dispatches to
+  the Kiefer–Wolfowitz workload-vector fast path in ``core/des_vector.py``
+  (per-segment ``lax.scan`` over pre-drawn variates, batched across apps),
+  which consumes the *same* chunked common-random-number streams and is
+  CRN-matched against this engine by ``tests/test_des_vector.py``.
+* **Service-time law** — ``service="exp"`` (the paper's M/M/N model) or
+  ``service="h2"``: a balanced-means two-branch hyperexponential with
+  squared coefficient of variation ``h2_scv`` (> 1), the first non-Poisson
+  knob of the ROADMAP follow-on. Erlang-C-optimized allocations degrade
+  measurably under H2 — the off-model gap the DES exists to expose.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from collections import deque
 from typing import Callable, Sequence
 
@@ -41,6 +53,35 @@ import numpy as np
 
 _ARRIVAL, _DEPART = 0, 1
 _CHUNK = 4096  # batched RNG draw size (vectorized event batching)
+_ENGINES = ("event", "vector")
+_SERVICES = ("exp", "h2")
+
+
+def h2_params(mu: float, scv: float) -> tuple[float, float, float]:
+    """Balanced-means hyperexponential fit: (p, mu1, mu2) such that the
+    mixture p·Exp(mu1) + (1-p)·Exp(mu2) has mean 1/mu and squared
+    coefficient of variation ``scv`` (>= 1), with each branch contributing
+    half the mean (p/mu1 = (1-p)/mu2)."""
+    if scv < 1.0:
+        raise ValueError(f"h2_scv must be >= 1 (got {scv}); scv=1 is exponential")
+    if scv == 1.0:
+        return 1.0, float(mu), float(mu)
+    p = 0.5 * (1.0 + math.sqrt((scv - 1.0) / (scv + 1.0)))
+    return p, 2.0 * p * mu, 2.0 * (1.0 - p) * mu
+
+
+def _service_chunk(
+    rng: np.random.Generator, mu: float, service: str, h2_scv: float
+) -> np.ndarray:
+    """One chunk of service-time draws. The ``exp`` recipe is byte-identical
+    to the historical one (seeded results unchanged); ``h2`` spends one
+    uniform + one unit-exponential per draw."""
+    if service == "exp":
+        return rng.exponential(1.0 / mu, size=_CHUNK)
+    p, mu1, mu2 = h2_params(mu, h2_scv)
+    u = rng.random(_CHUNK)
+    e = rng.exponential(1.0, size=_CHUNK)
+    return e / np.where(u < p, mu1, mu2)
 
 
 @dataclasses.dataclass
@@ -59,14 +100,17 @@ class _Cluster:
         "name", "lam", "mu", "n_servers", "busy", "queue", "version", "active",
         "arr_rng", "svc_rng", "_arr_buf", "_arr_pos", "_svc_buf", "_svc_pos",
         "arr_log", "resp_log", "n_arrived", "qlen_integral", "busy_time",
-        "last_t",
+        "last_t", "service", "h2_scv",
     )
 
-    def __init__(self, name, lam, mu, n_servers, arr_rng, svc_rng, t0):
+    def __init__(self, name, lam, mu, n_servers, arr_rng, svc_rng, t0,
+                 service="exp", h2_scv=4.0):
         self.name = name
         self.lam = float(lam)
         self.mu = float(mu)
         self.n_servers = int(n_servers)
+        self.service = service
+        self.h2_scv = float(h2_scv)
         self.busy = 0
         self.queue: deque[float] = deque()  # arrival times of waiting requests
         self.version = 0  # bumps on λ reconfig; stale arrival events are dropped
@@ -94,7 +138,9 @@ class _Cluster:
 
     def next_service(self) -> float:
         if self._svc_pos >= self._svc_buf.shape[0]:
-            self._svc_buf = self.svc_rng.exponential(1.0 / self.mu, size=_CHUNK)
+            self._svc_buf = _service_chunk(
+                self.svc_rng, self.mu, self.service, self.h2_scv
+            )
             self._svc_pos = 0
         v = self._svc_buf[self._svc_pos]
         self._svc_pos += 1
@@ -118,7 +164,16 @@ def _stream(seed: int, name: str, salt: int) -> np.random.Generator:
 
 
 class FleetSimulator:
-    """Event-driven fleet of M/M/N_i clusters with mid-run reconfiguration.
+    """Fleet of M/M/N_i (or M/H2/N_i) clusters with mid-run reconfiguration.
+
+    ``engine`` selects the implementation behind one contract:
+
+    * ``"event"`` (default, this class) — the heapq event loop, the reference
+      oracle: exact FCFS dynamics at any instant.
+    * ``"vector"`` — the Kiefer–Wolfowitz workload-vector fast path
+      (``core/des_vector.py``): between reconfiguration points each cluster
+      is a stationary segment simulated by a batched scan over pre-drawn
+      variates. Same chunked CRN streams, ~20-100x the event throughput.
 
     Typical closed-loop use (the ScenarioRunner DES backend)::
 
@@ -133,9 +188,32 @@ class FleetSimulator:
         resp = sim.responses("app0", 60.0, 120.0)  # now drain-complete
     """
 
-    def __init__(self, seed: int = 0):
+    engine = "event"
+
+    def __new__(cls, seed: int = 0, engine: str = "event", **kw):
+        if cls is FleetSimulator and engine != "event":
+            if engine == "vector":
+                from repro.core.des_vector import VectorFleetSimulator
+
+                return super().__new__(VectorFleetSimulator)
+            raise ValueError(f"engine must be one of {_ENGINES}, got {engine!r}")
+        return super().__new__(cls)
+
+    def __init__(
+        self,
+        seed: int = 0,
+        engine: str = "event",
+        service: str = "exp",
+        h2_scv: float = 4.0,
+    ):
+        if service not in _SERVICES:
+            raise ValueError(f"service must be one of {_SERVICES}, got {service!r}")
+        if service == "h2":
+            h2_params(1.0, h2_scv)  # validate scv early
         self.t = 0.0
         self.seed = int(seed)
+        self.service = service
+        self.h2_scv = float(h2_scv)
         self._heap: list[tuple] = []  # (t, seq, kind, name, aux)
         self._seq = 0
         self._clusters: dict[str, _Cluster] = {}
@@ -151,6 +229,8 @@ class FleetSimulator:
             arr_rng=_stream(self.seed, name, 17),
             svc_rng=_stream(self.seed, name, 29),
             t0=self.t,
+            service=self.service,
+            h2_scv=self.h2_scv,
         )
         self._clusters[name] = cl
         self._push_arrival(cl)
@@ -325,13 +405,16 @@ def simulate_mmn(
     horizon_s: float = 2000.0,
     warmup_s: float = 200.0,
     seed: int = 0,
+    engine: str = "event",
+    service: str = "exp",
+    h2_scv: float = 4.0,
 ) -> SimStats:
     """Single M/M/N cluster (the B=1 fleet). Response time = wait + service.
 
     All statistics — the response log AND the queue/utilization integrals —
     exclude the [0, warmup_s) transient; arrivals inside the measurement
     window are always completed (post-horizon drain), never truncated."""
-    sim = FleetSimulator(seed=seed)
+    sim = FleetSimulator(seed=seed, engine=engine, service=service, h2_scv=h2_scv)
     sim.add_app("mmn", lam, mu, n_servers)
     sim.run_until(warmup_s)
     snap = sim.snapshot("mmn")
@@ -350,12 +433,13 @@ def simulate_mmn(
     return stats
 
 
-def simulate_allocation(apps, allocation, horizon_s=2000.0, warmup_s=200.0, seed=0):
-    """Simulate every app cluster of an Allocation in ONE fleet event loop;
+def simulate_allocation(apps, allocation, horizon_s=2000.0, warmup_s=200.0, seed=0,
+                        engine="event", service="exp", h2_scv=4.0):
+    """Simulate every app cluster of an Allocation in ONE fleet loop;
     returns per-app SimStats (same order as ``apps``)."""
     from repro.core.problem import service_rate
 
-    sim = FleetSimulator(seed=seed)
+    sim = FleetSimulator(seed=seed, engine=engine, service=service, h2_scv=h2_scv)
     for i, app in enumerate(apps):
         mu = float(service_rate(app, allocation.r_cpu[i], allocation.r_mem[i]))
         sim.add_app(app.name, app.lam, mu, int(allocation.n[i]))
@@ -396,6 +480,7 @@ def run_quasi_dynamic(
     allocator: Callable,
     phase_len: float = 500.0,
     seed: int = 0,
+    engine: str = "event",
 ):
     """Replay a piecewise workload through ONE continuous fleet simulation;
     the allocator is consulted at each phase boundary (it may or may not
@@ -405,7 +490,7 @@ def run_quasi_dynamic(
     Returns per-phase dicts of mean response / allocation."""
     from repro.core.problem import service_rate
 
-    sim = FleetSimulator(seed=seed)
+    sim = FleetSimulator(seed=seed, engine=engine)
     windows = []
     for k, phase in enumerate(phases):
         phase_apps = [a.with_lam(l) for a, l in zip(apps, phase.lam)]

@@ -1,0 +1,471 @@
+"""Vectorized DES fast path: Kiefer–Wolfowitz segment simulation.
+
+Between reconfiguration points every cluster of the fleet is a *stationary*
+FCFS G/G/N_i segment, so instead of popping one heapq event at a time
+(``core/des.py``, the reference oracle) the whole segment is simulated with
+the c-server Kiefer–Wolfowitz workload-vector recurrence:
+
+    w ∈ R^n ascending = unfinished work per server at the latest arrival;
+    customer k (inter-arrival gap g_k, service s_k):
+        w ← max(w - g_k, 0)          # servers work off backlog until arrival
+        wait_k = w[0]                # FCFS: the earliest-free server
+        w ← sort-insert(w[1:], wait_k + s_k)
+
+The recurrence is exact for FCFS G/G/c, so per-customer response times
+(wait + service) — and therefore mean, p95, and the sample-path occupancy
+integrals (∫queue dt = Σ waits, ∫busy dt = Σ services) — come out of one
+scan over pre-drawn variates with no event heap at all.
+
+Batching (the ``engine.p1_solve_batch`` style): all M clusters advance in ONE
+``lax.scan`` — step k of lane i is lane i's k-th customer (each lane carries
+its own inter-arrival gaps, so lanes never synchronize). Customer counts pad
+to a pow2 with a per-step validity mask; server counts pad to a pow2 with
+masked slots pinned at a large sentinel so they never win the min. Hosts
+without a working JAX fall back to a chunked NumPy loop over the same arrays
+(still batched across lanes, ~3-10x the event engine; JAX is 20-100x).
+
+Hand-off invariants at ``configure()``/``retire()``/``activate()`` segment
+boundaries (DESIGN.md §10):
+
+* **In-service work carries.** Customers whose service STARTED inside a
+  segment keep their completion time — exactly the event engine's "in-service
+  keeps its drawn departure". Their absolute completion times seed the next
+  segment's workload vector.
+* **Queued customers replay.** Customers still waiting at a boundary re-enter
+  the next segment's recurrence ahead of new arrivals (FCFS order preserved),
+  keeping their true arrival times and already-drawn service times.
+* **CRN streams are shared.** Arrival/service draws consume the same chunked
+  ``(seed, name)``-keyed streams as the event engine, in the same order
+  (FCFS makes service-start order equal arrival order), so for λ/n-only
+  reconfiguration histories the two engines are sample-path identical up to
+  float round-off. At a μ change the event engine re-draws queued work at
+  service start (the new rate); here the queued draws are *rescaled* by
+  mu_old/mu_new — exactly the new-rate law for exponential and balanced-H2
+  service — so the backlog is served at the new speed in both engines, but
+  from different draws: μ-boundary parity is statistical only.
+* **Shrink is the non-preemptive limit.** Dropping the n - n' smallest
+  workload entries reproduces the event engine's retire-as-they-finish rule:
+  the queue resumes exactly at the (b - n' + 1)-th in-flight completion.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.des import (
+    _CHUNK,
+    FleetSimulator,
+    SimStats,
+    _service_chunk,
+    _stream,
+)
+
+_BIG = 1e30  # masked server-slot sentinel: never wins the min, absorbs gaps
+
+try:  # JAX scan backend (x64 is enabled by repro.core at import)
+    import jax
+    import jax.numpy as jnp
+
+    _HAS_JAX = True
+except Exception:  # pragma: no cover - the container always has jax
+    _HAS_JAX = False
+
+
+def _pad_pow2(k: int) -> int:
+    return 1 << max(k - 1, 0).bit_length()
+
+
+# ----------------------------------------------------------------------------
+# The segment scan: (M, n) workload carries, (K, M) per-customer inputs
+# ----------------------------------------------------------------------------
+def _kw_step_np(W, smask, g, s, v):
+    """One batched Kiefer–Wolfowitz step (NumPy). Returns (W', waits)."""
+    n = W.shape[1]
+    Wd = np.maximum(W - g[:, None], 0.0)
+    Wd[~smask] = _BIG
+    wait = Wd[:, 0]
+    new = wait + s
+    if n > 1:
+        rest = Wd[:, 1:]
+        pos = (rest < new[:, None]).sum(axis=1)
+        j = np.arange(n)[None, :]
+        take = np.clip(np.where(j < pos[:, None], j, j - 1), 0, n - 2)
+        Wn = np.take_along_axis(rest, take, axis=1)
+        Wn = np.where(j == pos[:, None], new[:, None], Wn)
+    else:
+        Wn = new[:, None]
+    Wn[~smask] = _BIG
+    W = np.where(v[:, None], Wn, W)
+    return W, np.where(v, wait, 0.0)
+
+
+def _segment_scan_numpy(W0, smask, gaps, svcs, valid):
+    W = W0.copy()
+    waits = np.empty_like(gaps)
+    for k in range(gaps.shape[0]):
+        W, waits[k] = _kw_step_np(W, smask, gaps[k], svcs[k], valid[k])
+    return W, waits
+
+
+if _HAS_JAX:
+
+    @jax.jit
+    def _segment_scan_jax(W0, smask, gaps, svcs, valid):
+        n = W0.shape[1]
+        j = jnp.arange(n)[None, :]
+
+        def step(W, xs):
+            g, s, v = xs
+            Wd = jnp.maximum(W - g[:, None], 0.0)
+            Wd = jnp.where(smask, Wd, _BIG)
+            wait = Wd[:, 0]
+            new = wait + s
+            if n > 1:
+                rest = Wd[:, 1:]
+                pos = jnp.sum(rest < new[:, None], axis=1)
+                take = jnp.clip(jnp.where(j < pos[:, None], j, j - 1), 0, n - 2)
+                Wn = jnp.take_along_axis(rest, take, axis=1)
+                Wn = jnp.where(j == pos[:, None], new[:, None], Wn)
+            else:
+                Wn = new[:, None]
+            Wn = jnp.where(smask, Wn, _BIG)
+            return jnp.where(v[:, None], Wn, W), jnp.where(v, wait, 0.0)
+
+        return jax.lax.scan(step, W0, (gaps, svcs, valid))
+
+
+def segment_scan(W0, smask, gaps, svcs, valid, backend="auto"):
+    """Run the batched recurrence over one segment. ``backend="auto"`` uses
+    JAX when importable, else the chunked NumPy loop."""
+    if backend == "auto":
+        backend = "jax" if _HAS_JAX else "numpy"
+    if backend == "jax":
+        if not _HAS_JAX:
+            raise RuntimeError("backend='jax' requested but jax is unavailable")
+        Wf, waits = _segment_scan_jax(W0, smask, gaps, svcs, valid)
+        return np.asarray(Wf), np.asarray(waits)
+    if backend != "numpy":
+        raise ValueError(f"backend must be auto|jax|numpy, got {backend!r}")
+    return _segment_scan_numpy(W0, smask, gaps, svcs, valid)
+
+
+# ----------------------------------------------------------------------------
+# Per-cluster segment state
+# ----------------------------------------------------------------------------
+class _VecCluster:
+    """One cluster's carried state between segments: chunked CRN buffers, the
+    pending (already-drawn) arrival, in-flight completion times, the replay
+    queue, and the finalized per-customer logs."""
+
+    __slots__ = (
+        "name", "lam", "mu", "n_servers", "active", "service", "h2_scv",
+        "arr_rng", "svc_rng", "_arr_buf", "_arr_pos", "_svc_buf", "_svc_pos",
+        "pending_t", "inflight", "queue_t", "queue_s",
+        "log_t", "log_w", "log_s", "_log_cache", "n_arrived",
+    )
+
+    def __init__(self, name, lam, mu, n_servers, seed, t0, service, h2_scv):
+        self.name = name
+        self.lam = float(lam)
+        self.mu = float(mu)
+        self.n_servers = int(n_servers)
+        self.active = True
+        self.service = service
+        self.h2_scv = float(h2_scv)
+        self.arr_rng = _stream(seed, name, 17)
+        self.svc_rng = _stream(seed, name, 29)
+        self._arr_buf = np.empty(0)
+        self._arr_pos = 0
+        self._svc_buf = np.empty(0)
+        self._svc_pos = 0
+        self.pending_t: float | None = None
+        self.inflight = np.empty(0)  # absolute completion times, > clock
+        self.queue_t = np.empty(0)  # waiting customers: true arrival times
+        self.queue_s = np.empty(0)  # ...and their already-drawn service times
+        self.log_t: list[np.ndarray] = []  # finalized: arrival / wait / service
+        self.log_w: list[np.ndarray] = []
+        self.log_s: list[np.ndarray] = []
+        self._log_cache: tuple | None = None
+        self.n_arrived = 0
+
+    # --------------------------------------------------------- CRN streams
+    def next_gap(self) -> float:
+        """One inter-arrival draw — same chunk recipe as the event engine."""
+        if self._arr_pos >= self._arr_buf.shape[0]:
+            self._arr_buf = self.arr_rng.exponential(1.0 / self.lam, size=_CHUNK)
+            self._arr_pos = 0
+        v = self._arr_buf[self._arr_pos]
+        self._arr_pos += 1
+        return float(v)
+
+    def arrivals_until(self, t_end: float) -> np.ndarray:
+        """Absolute arrival times <= t_end, consuming the chunked stream by
+        cumsum; leaves the overshoot arrival pending (exactly one drawn-ahead
+        arrival at all times, like the event engine's heap entry)."""
+        if not self.active or self.pending_t is None or self.pending_t > t_end:
+            return np.empty(0)
+        chunks = [np.array([self.pending_t])]
+        last = self.pending_t
+        while True:
+            if self._arr_pos >= self._arr_buf.shape[0]:
+                self._arr_buf = self.arr_rng.exponential(1.0 / self.lam, size=_CHUNK)
+                self._arr_pos = 0
+            ts = last + np.cumsum(self._arr_buf[self._arr_pos:])
+            k = int(np.searchsorted(ts, t_end, side="right"))
+            if k < ts.shape[0]:
+                chunks.append(ts[:k])
+                self._arr_pos += k + 1
+                self.pending_t = float(ts[k])
+                break
+            chunks.append(ts)
+            self._arr_pos = self._arr_buf.shape[0]
+            last = float(ts[-1])
+        arr = np.concatenate(chunks)
+        self.n_arrived += arr.shape[0]
+        return arr
+
+    def services(self, k: int) -> np.ndarray:
+        """k service draws from the chunked stream. FCFS service-start order
+        equals arrival order, so consuming at arrival keeps the sequence
+        aligned with the event engine's consume-at-start."""
+        out = []
+        need = int(k)
+        while need > 0:
+            if self._svc_pos >= self._svc_buf.shape[0]:
+                self._svc_buf = _service_chunk(
+                    self.svc_rng, self.mu, self.service, self.h2_scv
+                )
+                self._svc_pos = 0
+            take = min(need, self._svc_buf.shape[0] - self._svc_pos)
+            out.append(self._svc_buf[self._svc_pos:self._svc_pos + take])
+            self._svc_pos += take
+            need -= take
+        return np.concatenate(out) if out else np.empty(0)
+
+    # ------------------------------------------------------------- carries
+    def workload_at(self, t0: float, n_pad: int) -> np.ndarray:
+        """The segment-start workload vector: in-flight remainders ascending,
+        idle servers at 0, masked slots at the sentinel. After a shrink the
+        n_servers LARGEST remainders stay — the non-preemptive limit (the
+        queue resumes at the (b - n' + 1)-th in-flight completion, exactly
+        when the event engine's server count re-reaches n')."""
+        w = np.full(n_pad, _BIG)
+        n = self.n_servers
+        if n == 0:
+            return w
+        rem = np.sort(self.inflight - t0)
+        rem = rem[rem > 0.0]
+        if rem.shape[0] > n:
+            rem = rem[-n:]
+        w[:n] = 0.0
+        if rem.shape[0]:
+            w[n - rem.shape[0]:n] = rem
+        return w
+
+    def record(self, t_arr, wait, svc) -> None:
+        if t_arr.shape[0]:
+            self.log_t.append(t_arr)
+            self.log_w.append(wait)
+            self.log_s.append(svc)
+            self._log_cache = None
+
+    def logs(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if self._log_cache is None:
+            if self.log_t:
+                self._log_cache = (
+                    np.concatenate(self.log_t),
+                    np.concatenate(self.log_w),
+                    np.concatenate(self.log_s),
+                )
+            else:
+                self._log_cache = (np.empty(0), np.empty(0), np.empty(0))
+        return self._log_cache
+
+
+# ----------------------------------------------------------------------------
+# The fleet
+# ----------------------------------------------------------------------------
+class VectorFleetSimulator(FleetSimulator):
+    """Drop-in ``FleetSimulator(engine="vector")`` implementation: same admin
+    and stats contract, but ``run_until`` advances one whole stationary
+    segment per call through the batched recurrence instead of an event loop.
+
+    ``backend`` pins the scan implementation ("jax" | "numpy" | "auto").
+
+    One intentional pre-``drain()`` difference from the oracle: a customer's
+    response is final once its service STARTS, so ``responses()`` before
+    ``drain()`` already includes in-service customers the event engine would
+    only log at departure. After ``drain()`` (the documented stats workflow)
+    the two engines report identical windows."""
+
+    engine = "vector"
+
+    def __init__(
+        self,
+        seed: int = 0,
+        engine: str = "vector",
+        service: str = "exp",
+        h2_scv: float = 4.0,
+        backend: str = "auto",
+    ):
+        if engine != "vector":
+            raise ValueError(f"VectorFleetSimulator is engine='vector', got {engine!r}")
+        if backend not in ("auto", "jax", "numpy"):
+            raise ValueError(f"backend must be auto|jax|numpy, got {backend!r}")
+        super().__init__(seed=seed, service=service, h2_scv=h2_scv)
+        self.backend = backend
+        self._clusters: dict[str, _VecCluster] = {}
+
+    # ------------------------------------------------------------------ admin
+    def add_app(self, name: str, lam: float, mu: float, n_servers: int) -> None:
+        if name in self._clusters:
+            raise ValueError(f"app {name!r} already simulated")
+        if mu <= 0 or n_servers < 0:
+            raise ValueError(f"app {name!r}: need mu > 0 and n_servers >= 0")
+        cl = _VecCluster(
+            name, lam, mu, n_servers, seed=self.seed, t0=self.t,
+            service=self.service, h2_scv=self.h2_scv,
+        )
+        self._clusters[name] = cl
+        if cl.lam > 0.0:
+            cl.pending_t = self.t + cl.next_gap()
+
+    def configure(self, name, lam=None, mu=None, n_servers=None) -> None:
+        """Segment boundary at the current instant; see the module docstring
+        for the carried-work semantics."""
+        cl = self._cluster(name)
+        if lam is not None and float(lam) != cl.lam:
+            cl.lam = float(lam)
+            cl._arr_buf = np.empty(0)  # supersede the pending arrival
+            cl._arr_pos = 0
+            cl.pending_t = (
+                self.t + cl.next_gap() if cl.active and cl.lam > 0.0 else None
+            )
+        if mu is not None and float(mu) != cl.mu:
+            if mu <= 0:
+                raise ValueError(f"app {name!r}: mu must be > 0")
+            # The oracle re-draws queued work at service START, i.e. at the
+            # new rate. Rescaling the queued draws keeps that law exactly —
+            # c·Exp(mu_old) with c = mu_old/mu_new IS Exp(mu_new), and the
+            # balanced-means H2 branch rates both scale linearly in mu — so
+            # a congested boundary followed by a scale-up serves its backlog
+            # at the new speed instead of the stale one.
+            cl.queue_s = cl.queue_s * (cl.mu / float(mu))
+            cl.mu = float(mu)
+            cl._svc_buf = np.empty(0)
+            cl._svc_pos = 0
+        if n_servers is not None and int(n_servers) != cl.n_servers:
+            cl.n_servers = int(n_servers)  # next workload_at() applies it
+
+    def retire(self, name: str) -> None:
+        cl = self._cluster(name)
+        cl.active = False
+        cl.pending_t = None  # the consumed draw is discarded, as in the oracle
+
+    def activate(self, name: str) -> None:
+        cl = self._cluster(name)
+        if cl.active:
+            return
+        cl.active = True
+        if cl.lam > 0.0:
+            cl.pending_t = self.t + cl.next_gap()
+
+    # ------------------------------------------------------------- event loop
+    def run_until(self, t_end: float) -> None:
+        if not np.isfinite(t_end):
+            raise ValueError("run_until(t_end) needs a finite horizon; use drain()")
+        if t_end > self.t:
+            self._simulate_segment(float(t_end), drain=False)
+            self.t = float(t_end)
+
+    def drain(self) -> None:
+        """Stop arrivals and finalize every admitted customer. The recurrence
+        already computed in-flight completions, so draining is one unbounded
+        segment over the replay queues."""
+        for cl in self._clusters.values():
+            cl.pending_t = None
+        t_done = self._simulate_segment(np.inf, drain=True)
+        self.t = max(self.t, t_done)
+
+    def _simulate_segment(self, t_end: float, drain: bool) -> float:
+        """Advance every cluster from the current clock to t_end (one
+        stationary segment) through one batched scan. Returns the time of the
+        last completion (for drain's clock semantics)."""
+        t0 = self.t
+        work = []
+        for cl in self._clusters.values():
+            arr = cl.arrivals_until(t_end)
+            svc = cl.services(arr.shape[0])
+            nq = cl.queue_t.shape[0]
+            # replayed queued customers go first (FCFS), at effective time t0
+            eff = np.concatenate((np.full(nq, t0), arr))
+            tru = np.concatenate((cl.queue_t, arr))
+            s = np.concatenate((cl.queue_s, svc))
+            work.append((cl, eff, tru, s))
+        K = max((e.shape[0] for _, e, _, _ in work), default=0)
+        if K == 0:
+            return t0
+        Kp = _pad_pow2(K)
+        Mp = _pad_pow2(len(work))
+        n_pad = _pad_pow2(max(max(cl.n_servers for cl, *_ in work), 1))
+
+        W0 = np.full((Mp, n_pad), _BIG)
+        smask = np.zeros((Mp, n_pad), dtype=bool)
+        gaps = np.zeros((Kp, Mp))
+        svcs = np.zeros((Kp, Mp))
+        valid = np.zeros((Kp, Mp), dtype=bool)
+        for i, (cl, eff, _, s) in enumerate(work):
+            W0[i] = cl.workload_at(t0, n_pad)
+            smask[i, : cl.n_servers] = True
+            k = eff.shape[0]
+            gaps[:k, i] = np.diff(eff, prepend=t0)
+            svcs[:k, i] = s
+            valid[:k, i] = True
+
+        _, waits = segment_scan(W0, smask, gaps, svcs, valid, backend=self.backend)
+
+        t_last = t0
+        for i, (cl, eff, tru, s) in enumerate(work):
+            if drain and cl.inflight.shape[0]:
+                t_last = max(t_last, float(cl.inflight.max()))
+            k = eff.shape[0]
+            if k == 0:
+                cl.inflight = cl.inflight[cl.inflight > t_end]
+                continue
+            start = eff + waits[:k, i]
+            comp = start + s
+            # wait >= the sentinel means "no server will ever free" (n=0):
+            # those customers stay queued even through drain, as in the oracle
+            can_start = waits[:k, i] < 0.5 * _BIG
+            started = can_start if drain else can_start & (start <= t_end)
+            cl.record(tru[started], (start - tru)[started], s[started])
+            cl.queue_t = tru[~started]
+            cl.queue_s = s[~started]
+            done = comp[started]
+            cl.inflight = np.concatenate(
+                (cl.inflight[cl.inflight > t_end], done[done > t_end])
+            )
+            if done.shape[0]:
+                t_last = max(t_last, float(done.max()))
+        return t_last
+
+    # ------------------------------------------------------------------ stats
+    def snapshot(self, name: str) -> tuple[float, float]:
+        """(qlen_integral, busy_time) at the current clock, from the exact
+        sample-path identities: every customer contributes its waiting
+        interval to the queue integral and its service interval to the busy
+        integral, clipped at the clock."""
+        cl = self._cluster(name)
+        t = self.t
+        t_arr, wait, svc = cl.logs()
+        start = t_arr + wait
+        qlen = float(np.sum(np.clip(np.minimum(start, t) - t_arr, 0.0, None)))
+        if cl.queue_t.shape[0]:
+            qlen += float(np.sum(np.clip(t - cl.queue_t, 0.0, None)))
+        busy = float(np.sum(np.clip(np.minimum(start + svc, t) - start, 0.0, None)))
+        return qlen, busy
+
+    def responses(self, name: str, t_start: float, t_end: float) -> np.ndarray:
+        cl = self._cluster(name)
+        t_arr, wait, svc = cl.logs()
+        mask = (t_arr >= t_start) & (t_arr < t_end)
+        return (wait + svc)[mask]

@@ -9,6 +9,7 @@ from conftest import given, settings, st
 from repro.core.des import (
     FleetSimulator,
     WorkloadPhase,
+    h2_params,
     run_quasi_dynamic,
     simulate_allocation,
     simulate_mmn,
@@ -147,6 +148,50 @@ def test_fleet_common_random_number_arrivals():
     a.run_until(300.0)
     b.run_until(300.0)
     assert a._clusters["x"].n_arrived == b._clusters["x"].n_arrived
+
+
+def test_h2_params_balanced_means():
+    """The fit must hit the requested first two moments exactly: mean 1/mu,
+    squared coefficient of variation scv, each branch carrying half the mean."""
+    p, mu1, mu2 = h2_params(2.0, 4.0)
+    mean = p / mu1 + (1.0 - p) / mu2
+    m2 = 2.0 * (p / mu1**2 + (1.0 - p) / mu2**2)
+    assert mean == pytest.approx(0.5)
+    assert (m2 - mean**2) / mean**2 == pytest.approx(4.0)
+    assert p / mu1 == pytest.approx((1.0 - p) / mu2)  # balanced means
+    assert h2_params(2.0, 1.0) == (1.0, 2.0, 2.0)  # scv=1 degenerates to exp
+    with pytest.raises(ValueError):
+        h2_params(2.0, 0.5)
+    with pytest.raises(ValueError):
+        FleetSimulator(service="weibull")
+    with pytest.raises(ValueError):
+        FleetSimulator(service="h2", h2_scv=0.3)
+
+
+def test_h2_service_degrades_erlang_c_allocation():
+    """Satellite (ROADMAP non-Poisson follow-on): an Erlang-C-optimized
+    allocation is calibrated to exponential service. Replaying the SAME
+    allocation under hyperexponential service with the same mean (scv=4)
+    must congest measurably beyond the model — the off-model gap only an
+    independent simulator can expose."""
+    from repro.core.crms import crms
+    from repro.core.problem import ServerCaps
+    from repro.core.profiler import make_paper_apps
+
+    apps = make_paper_apps(lam=(8, 7, 10, 15), fitted=False)
+    alloc = crms(apps, ServerCaps(30.0, 10.0), 1.4, 0.2)
+    exp = simulate_allocation(apps, alloc, horizon_s=2500.0, seed=3)
+    h2 = simulate_allocation(
+        apps, alloc, horizon_s=2500.0, seed=3, service="h2", h2_scv=4.0
+    )
+    lam = np.array([a.lam for a in apps])
+    mean_exp = float(sum(l * s.mean_response_s for l, s in zip(lam, exp)) / lam.sum())
+    mean_h2 = float(sum(l * s.mean_response_s for l, s in zip(lam, h2)) / lam.sum())
+    assert mean_h2 > 1.05 * mean_exp  # the allocation is measurably off-model
+    # the tail degrades harder than the mean (heavier-tailed service)
+    p95_exp = max(s.p95_response_s for s in exp)
+    p95_h2 = max(s.p95_response_s for s in h2)
+    assert p95_h2 > 1.15 * p95_exp
 
 
 def test_quasi_dynamic_driver():
