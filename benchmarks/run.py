@@ -2,7 +2,7 @@
 # (plus human-readable detail) for: Table I, Figs 2-3, 6-10, 11-14, 15-22, the
 # M/M/N validation, the solver throughput sweep, the quasi-dynamic trace, the
 # cross-policy scenario matrix, the DES engine throughput gate, the TPU fleet
-# benchmark and the roofline report.
+# benchmark, the multi-node placement gates and the roofline report.
 #
 # CLI filters (CI and local runs can execute a single section):
 #   --only <section>[,<section>...]   run only the named sections (repeatable)
@@ -33,6 +33,7 @@ SECTIONS = (
     "scenarios",
     "des_throughput",
     "fleet_tpu",
+    "fleet_placement",
     "roofline_report",
 )
 
@@ -43,6 +44,7 @@ ARTIFACTS = {
     "quasidynamic_trace": ("BENCH_quasidynamic.json",),
     "scenarios": ("BENCH_scenarios.json",),
     "des_throughput": ("BENCH_des.json",),
+    "fleet_placement": ("BENCH_fleet.json",),
 }
 
 

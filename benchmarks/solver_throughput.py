@@ -15,9 +15,11 @@ mixes, isolating the two PR-2 contributions against the PR-1 baseline:
 
 All paths are warmed first (jit compilation excluded) and cross-checked
 against the reference-schedule solution at 1e-6 relative utility tolerance
-(the bound tests/test_structured_newton.py pins). Per-M records land in
-BENCH_solver.json; the gate requires parity everywhere and a ≥5× structured
-speedup at every measured M (the ISSUE-2 acceptance floor is M=32).
+(the bound tests/test_structured_newton.py pins). Per-M records MERGE into
+BENCH_solver.json (a partial sweep replaces only its own M entries and keeps
+the rest); the gate requires parity and a ≥5× structured speedup for every
+record present in the merged artifact — so the CI --M 8 smoke also re-asserts
+the committed M ∈ {16,32,64} records (the ISSUE-2 acceptance floor is M=32).
 
 CLI:  python benchmarks/solver_throughput.py [--M 8,16,32,64] [--reps 3]
 """
@@ -140,22 +142,38 @@ def run(m_list=(8, 16, 32, 64), reps: int = 3) -> bool:
             f"parity {'OK' if rec['parity_ok'] else 'FAIL'}"
         )
 
-    ok = all(r["parity_ok"] for r in records) and all(
-        r["speedup_structured"] >= SPEEDUP_FLOOR for r in records
-    )
+    # Merge with the committed artifact: a partial sweep (CI runs --M 8)
+    # REPLACES only the re-measured M records and keeps the rest, so the full
+    # M ∈ {8,16,32,64} sweep stays on disk. The gate asserts parity and the
+    # speedup floor for EVERY record present — stale committed records can
+    # fail a fresh partial run, which is the point.
     out = Path(__file__).resolve().parent.parent / "BENCH_solver.json"
+    merged = {r["M"]: r for r in records}
+    if out.exists():
+        try:
+            for r in json.loads(out.read_text()).get("per_M", ()):
+                merged.setdefault(int(r["M"]), r)
+        except (ValueError, KeyError, TypeError):
+            pass  # unreadable artifact: rewrite from this run alone
+    all_records = [merged[M] for M in sorted(merged)]
+
+    ok = all(r["parity_ok"] for r in all_records) and all(
+        r["speedup_structured"] >= SPEEDUP_FLOOR for r in all_records
+    )
     out.write_text(
         json.dumps(
             {
                 "speedup_floor": SPEEDUP_FLOOR,
                 "parity_rtol": RTOL,
                 "ok": ok,
-                "per_M": records,
+                "measured_M": sorted(int(M) for M in {r["M"] for r in records}),
+                "per_M": all_records,
             },
             indent=2,
         )
         + "\n"
     )
+    records = all_records
     worst = min(records, key=lambda r: r["speedup_structured"])
     emit(
         "solver_throughput",

@@ -11,7 +11,7 @@ Submodules:
     registry     — Policy protocol, register_policy, get_policy, allocate
     policies     — the built-ins: crms, snfc1/2, random_search, gpbo, tpebo, drf
     quasidynamic — QuasiDynamicPolicy, the §V-B caching decorator
-    scenario     — Scenario, events, ScenarioRunner, BENCH_scenarios schema
+    scenario     — Scenario/FleetScenario, events, runners, BENCH schemas
 
 Exports resolve lazily (PEP 562): ``repro.core.crms`` imports the contract
 types from here while ``repro.api.policies`` imports the solvers from core —
@@ -46,7 +46,10 @@ _EXPORTS = {
     "LambdaSet": "repro.api.scenario",
     "AppJoin": "repro.api.scenario",
     "AppLeave": "repro.api.scenario",
+    "AppMigrate": "repro.api.scenario",
     "CapResize": "repro.api.scenario",
+    "FleetScenario": "repro.api.scenario",
+    "FleetScenarioRunner": "repro.api.scenario",
     "ScenarioEvent": "repro.api.scenario",
     "validate_scenarios_doc": "repro.api.scenario",
     "compact_scenarios_doc": "repro.api.scenario",

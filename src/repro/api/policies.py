@@ -128,6 +128,99 @@ def drf_policy(request: AllocRequest) -> AllocResult:
     return _result(alloc, "drf", t0)
 
 
+class CrmsFleetPolicy:
+    """Fleet-of-fleets placement (core.placement.FleetPlanner) behind the
+    allocation contract: apps spread across N nodes, per-node CRMS-style P1
+    inner allocations solved as one batched row solve.
+
+    Fleet shape comes in through ``request.extra``:
+
+    node_caps       (required) sequence of (cpu, mem) pairs or ServerCaps
+    migrations      optional [(app_name, dst_node), ...] applied this epoch
+    exchange_rounds optional outer-refinement rounds on cold plans (default 2)
+    mesh            optional jax Mesh to shard the row solve over
+
+    STATEFUL singleton like predictive_crms (self_caching): the first call
+    (or any change of app-name set / fleet shape / objective weights) runs a
+    cold plan — greedy placement + exchange + full row solve; subsequent
+    calls run the incremental re-plan, re-solving only the nodes touched by
+    λ drift and migrations. ``reset()`` drops the placement state."""
+
+    self_caching = True
+
+    def __init__(self, name: str = "crms_fleet"):
+        self.name = name
+        self._planner = None
+        self._key = None
+
+    def reset(self) -> None:
+        self._planner = None
+        self._key = None
+
+    def allocate(self, request: AllocRequest) -> AllocResult:
+        from repro.core.placement import FleetPlanner
+
+        t0 = time.perf_counter()
+        node_caps = request.extra.get("node_caps")
+        if node_caps is None:
+            raise ValueError("crms_fleet needs request.extra['node_caps']")
+        caps_key = tuple(
+            (float(c.r_cpu), float(c.r_mem)) if hasattr(c, "r_cpu") else (float(c[0]), float(c[1]))
+            for c in node_caps
+        )
+        key = (request.names(), caps_key, float(request.alpha), float(request.beta))
+        migrations = tuple(request.extra.get("migrations", ()))
+        if self._planner is None or key != self._key:
+            self._planner = FleetPlanner(
+                request.apps,
+                node_caps,
+                alpha=request.alpha,
+                beta=request.beta,
+                exchange_rounds=int(request.extra.get("exchange_rounds", 2)),
+                mesh=request.extra.get("mesh"),
+                seed=request.seed,
+            )
+            self._key = key
+            plan = self._planner.plan()
+            if migrations:
+                plan = self._planner.replan(migrations=migrations)
+        else:
+            plan = self._planner.replan(
+                lam={a.name: a.lam for a in request.apps},
+                migrations=migrations,
+            )
+        pl = self._planner
+        power_w = pl.power_span * plan.n * plan.r_cpu / pl.caps_cpu[plan.assignment]
+        ok = bool(plan.node_ok.all())
+        alloc = Allocation(
+            n=plan.n.copy(),
+            r_cpu=plan.r_cpu.copy(),
+            r_mem=plan.r_mem.copy(),
+            utility=plan.utility,
+            ws=plan.ws.copy(),
+            power_w=power_w,
+            feasible=ok,
+            stable=ok,
+            meta={
+                "diagnostics": dict(plan.diagnostics),
+                "assignment": plan.assignment.tolist(),
+                "node_utility": plan.node_utility.tolist(),
+            },
+        )
+        return _result(
+            alloc, self.name, t0,
+            cold=bool(plan.diagnostics.get("cold", False)),
+            width=plan.diagnostics.get("width"),
+            M_pad=plan.diagnostics.get("M_pad"),
+            nodes_failed=plan.diagnostics.get("nodes_failed", 0),
+            exchange_accepted=plan.diagnostics.get("exchange_accepted", 0),
+        )
+
+
+# Stateful like predictive_crms (see below): the placement state IS the value.
+register_policy("crms_fleet")(CrmsFleetPolicy())
+
+
 def _register_predictive() -> None:
     # Imported here (not at module top): quasidynamic imports the registry,
     # which is mid-load while this module registers the built-ins.

@@ -11,6 +11,10 @@ importing their individual signatures.
 
 Built-in policies live in ``repro.api.policies`` and are registered lazily on
 first lookup, so importing the contract types never drags in the solvers.
+Single-node policies read only the request's (apps, caps); the fleet policy
+``crms_fleet`` additionally takes its node shape through
+``request.extra["node_caps"]`` (and optional ``"migrations"``) and reports
+placement diagnostics (nodes_total/nodes_solved/migrations).
 """
 from __future__ import annotations
 

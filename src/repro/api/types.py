@@ -145,6 +145,10 @@ class Diagnostics:
     p1_calls: int = 0  # batched P1 solves issued
     p1_rescued_rows: int = 0  # phase-1 rows rescued by the hint fallback chain
     p1_masked_rows: int = 0  # phase-1 rows masked infeasible (no interior point)
+    # fleet placement layer (crms_fleet; 0 for single-node policies)
+    nodes_total: int = 0  # fleet size the placement layer planned over
+    nodes_solved: int = 0  # nodes actually re-solved (== total on cold plans)
+    migrations: int = 0  # app migrations applied this plan (incl. emergency)
     extra: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
@@ -159,6 +163,9 @@ class Diagnostics:
             p1_calls=int(d.get("p1_calls", 0)),
             p1_rescued_rows=int(d.get("p1_rescued_rows", 0)),
             p1_masked_rows=int(d.get("p1_masked_rows", 0)),
+            nodes_total=int(d.get("nodes_total", 0)),
+            nodes_solved=int(d.get("nodes_solved", 0)),
+            migrations=int(d.get("migrations", 0)),
         )
 
 

@@ -87,9 +87,26 @@ def as_packed(apps) -> PackedApps:
 
 
 def _eq1_np(kappa: np.ndarray, c, m):
-    """Eq. (1) in NumPy, broadcasting kappa (M,3) against (..., M) quotas."""
-    k1, k2, k3 = kappa[:, 0], kappa[:, 1], kappa[:, 2]
+    """Eq. (1) in NumPy, broadcasting kappa (..., M, 3) against (..., M)
+    quotas — the trailing-axis indexing also accepts the fleet layer's
+    per-node (N, M, 3) parameter stacks."""
+    k1, k2, k3 = kappa[..., 0], kappa[..., 1], kappa[..., 2]
     return k1 / (1.0 - np.exp(-k2 * c)) + np.exp(k3 / m)
+
+
+def _mask_counts(packed, n):
+    """(n_eff, n_ws) under the optional packed["mask"] sentinel-slot pattern.
+
+    Fleet rows pad heterogeneous per-node app counts to one static M with
+    masked slots (mask = 0). Padded slots carry n = 0 so ``n_eff`` zeroes
+    their budget/power contributions for free, while ``n_ws`` sanitizes them
+    to 1 server so the Erlang-C evaluations at the sentinel app parameters
+    stay finite (their ws values are masked out of every sum afterwards).
+    """
+    mask = packed.get("mask") if isinstance(packed, dict) else None
+    if mask is None:
+        return n, n
+    return n * mask, jnp.where(mask > 0, n, jnp.ones_like(n))
 
 
 def _alpha_arg(alpha):
@@ -105,28 +122,43 @@ def _alpha_arg(alpha):
 # ----------------------------------------------------------------------------
 # P1 objective / barrier (Theorem 4) — shared by serial and batched paths
 # ----------------------------------------------------------------------------
-def p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
-    """Σ_i α Ws_i + β ΔP_i/λ_i as a function of x = [c_1..c_M, m_1..m_M]."""
+def p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta,
+                 width: int | None = None):
+    """Σ_i α Ws_i + β ΔP_i/λ_i as a function of x = [c_1..c_M, m_1..m_M].
+
+    Honors the optional ``packed["mask"]`` sentinel-slot pattern (masked
+    slots contribute exactly 0) and the optional static Erlang sum ``width``.
+    """
     M = packed["lam"].shape[0]
     c, m = x[:M], x[M:]
+    mask = packed.get("mask")
+    n_eff, n_ws = _mask_counts(packed, n)
     d_ms = eq1_latency(
-        (packed["kappa"][:, 0], packed["kappa"][:, 1], packed["kappa"][:, 2]), c, m
+        (packed["kappa"][..., 0], packed["kappa"][..., 1], packed["kappa"][..., 2]), c, m
     )
     mu = 1000.0 / (packed["xbar"] * d_ms)
-    ws = jax.vmap(queueing.erlang_ws)(n, packed["lam"], mu)
-    dp = power_span * n * c / caps_cpu
-    return jnp.sum(alpha * ws + beta * dp / packed["lam"])
+    ws = jax.vmap(partial(queueing.erlang_ws, width=width))(n_ws, packed["lam"], mu)
+    dp = power_span * n_eff * c / caps_cpu
+    terms = alpha * ws + beta * dp / packed["lam"]
+    if mask is not None:
+        terms = jnp.where(mask > 0, terms, 0.0)
+    return jnp.sum(terms)
 
 
 def p1_slacks(x, packed, n, caps_cpu, caps_mem):
     """The barrier constraint slacks (budgets, memory box, CPU floor) — the
     single definition shared by the barrier value and the line search's cheap
-    feasibility check, so the two cannot drift."""
+    feasibility check, so the two cannot drift. Masked slots (n = 0 via
+    ``packed["mask"]``) leave the budget slacks untouched; their box slacks
+    stay a positive constant because the Newton direction freezes their
+    coordinates, so they shift the barrier by a constant that cancels out of
+    every line-search comparison."""
     M = packed["lam"].shape[0]
     c, m = x[:M], x[M:]
+    n_eff, _ = _mask_counts(packed, n)
     return jnp.concatenate(
         [
-            jnp.asarray([caps_cpu - jnp.sum(n * c), caps_mem - jnp.sum(n * m)]),
+            jnp.asarray([caps_cpu - jnp.sum(n_eff * c), caps_mem - jnp.sum(n_eff * m)]),
             m - packed["r_min"],
             packed["r_max"] - m,
             c - packed["cpu_min"],
@@ -134,8 +166,9 @@ def p1_slacks(x, packed, n, caps_cpu, caps_mem):
     )
 
 
-def p1_barrier(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
-    f = p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta)
+def p1_barrier(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta,
+               width: int | None = None):
+    f = p1_objective(x, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, width)
     slacks = p1_slacks(x, packed, n, caps_cpu, caps_mem)
     barrier = -jnp.sum(jnp.log(slacks))
     return t * f + barrier, slacks
@@ -144,17 +177,23 @@ def p1_barrier(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
 def p1_rho(x, packed, n):
     M = packed["lam"].shape[0]
     c, m = x[:M], x[M:]
+    mask = packed.get("mask")
+    _, n_ws = _mask_counts(packed, n)
     d_ms = eq1_latency(
-        (packed["kappa"][:, 0], packed["kappa"][:, 1], packed["kappa"][:, 2]), c, m
+        (packed["kappa"][..., 0], packed["kappa"][..., 1], packed["kappa"][..., 2]), c, m
     )
     mu = 1000.0 / (packed["xbar"] * d_ms)
-    return packed["lam"] / (n * mu)
+    rho = packed["lam"] / (n_ws * mu)
+    # masked slots report rho = 0 so the stability predicate never freezes a
+    # whole row on a sentinel lane
+    return rho if mask is None else jnp.where(mask > 0, rho, 0.0)
 
 
 _NEWTON_DAMP = 1e-9  # diagonal damping shared by the dense and structured paths
 
 
-def _newton_direction_structured(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta):
+def _newton_direction_structured(x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta,
+                                 width: int | None = None):
     """Analytic Newton direction H⁻¹g for the P1 barrier in O(M).
 
     The barrier Hessian has exploitable structure (DESIGN.md §5): the
@@ -175,8 +214,10 @@ def _newton_direction_structured(x, t, packed, n, caps_cpu, caps_mem, power_span
     """
     M = packed["lam"].shape[0]
     c, m = x[:M], x[M:]
-    k1, k2, k3 = packed["kappa"][:, 0], packed["kappa"][:, 1], packed["kappa"][:, 2]
+    k1, k2, k3 = packed["kappa"][..., 0], packed["kappa"][..., 1], packed["kappa"][..., 2]
     lam, xbar = packed["lam"], packed["xbar"]
+    mask = packed.get("mask")
+    n_eff, n_ws = _mask_counts(packed, n)
 
     # Eq. (1): d = k1/(1-e^{-k2 c}) + e^{k3/m}, separable so d_cm = 0
     e = jnp.exp(-k2 * c)
@@ -197,23 +238,31 @@ def _newton_direction_structured(x, t, packed, n, caps_cpu, caps_mem, power_span
     mu_mm = K * (2.0 * d_m**2 / d**3 - d_mm / d**2)
     mu_cm = 2.0 * K * d_c * d_m / d**3
 
-    _, ws1, ws2 = jax.vmap(queueing.erlang_ws_derivs)(n, lam, mu)
-    P = beta * power_span * n / (caps_cpu * lam)  # linear power slope in c
+    _, ws1, ws2 = jax.vmap(partial(queueing.erlang_ws_derivs, width=width))(n_ws, lam, mu)
+    P = beta * power_span * n_eff / (caps_cpu * lam)  # linear power slope in c
 
     f_c = alpha * ws1 * mu_c + P
     f_m = alpha * ws1 * mu_m
     f_cc = alpha * (ws2 * mu_c**2 + ws1 * mu_cc)
     f_cm = alpha * (ws2 * mu_c * mu_m + ws1 * mu_cm)
     f_mm = alpha * (ws2 * mu_m**2 + ws1 * mu_mm)
+    if mask is not None:
+        # masked-slot objective terms are constants (0): drop their (finite,
+        # sentinel-app) derivatives so the frozen coordinates carry no pull
+        f_c = f_c * mask
+        f_m = f_m * mask
+        f_cc = f_cc * mask
+        f_cm = f_cm * mask
+        f_mm = f_mm * mask
 
-    s_cpu = caps_cpu - jnp.sum(n * c)
-    s_mem = caps_mem - jnp.sum(n * m)
+    s_cpu = caps_cpu - jnp.sum(n_eff * c)
+    s_mem = caps_mem - jnp.sum(n_eff * m)
     sc_lo = c - packed["cpu_min"]
     sm_lo = m - packed["r_min"]
     sm_hi = packed["r_max"] - m
 
-    g_c = t * f_c + n / s_cpu - 1.0 / sc_lo
-    g_m = t * f_m + n / s_mem - 1.0 / sm_lo + 1.0 / sm_hi
+    g_c = t * f_c + n_eff / s_cpu - 1.0 / sc_lo
+    g_m = t * f_m + n_eff / s_mem - 1.0 / sm_lo + 1.0 / sm_hi
 
     bcc = t * f_cc + 1.0 / sc_lo**2 + _NEWTON_DAMP
     bmm = t * f_mm + 1.0 / sm_lo**2 + 1.0 / sm_hi**2 + _NEWTON_DAMP
@@ -223,8 +272,8 @@ def _newton_direction_structured(x, t, packed, n, caps_cpu, caps_mem, power_span
     def bsolve(rc, rm):  # per-app 2×2 solve B_i y_i = r_i, vectorized over apps
         return (bmm * rc - bcm * rm) / det, (bcc * rm - bcm * rc) / det
 
-    u = n / s_cpu  # rank-1 factors of the two budget-barrier Hessians
-    v = n / s_mem
+    u = n_eff / s_cpu  # rank-1 factors of the two budget-barrier Hessians
+    v = n_eff / s_mem
     yg_c, yg_m = bsolve(g_c, g_m)
     yu_c, yu_m = bsolve(u, jnp.zeros_like(u))
     yv_c, yv_m = bsolve(jnp.zeros_like(v), v)
@@ -241,11 +290,17 @@ def _newton_direction_structured(x, t, packed, n, caps_cpu, caps_mem, power_span
     w2 = (S11 * bv - S21 * bu) / detS
     dx_c = yg_c - (yu_c * w1 + yv_c * w2)
     dx_m = yg_m - (yu_m * w1 + yv_m * w2)
+    if mask is not None:
+        # freeze masked coordinates at their box-center start: their barrier
+        # contribution stays a CONSTANT shift of every line-search value, so
+        # acceptance decisions match the unpadded solve exactly
+        dx_c = dx_c * mask
+        dx_m = dx_m * mask
     return jnp.concatenate([dx_c, dx_m])
 
 
 def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer, n_inner,
-             solver: str = "structured", t0: float = 1.0):
+             solver: str = "structured", t0: float = 1.0, width: int | None = None):
     """Log-barrier interior point: t <- t*mu_t, damped Newton inner loop with a
     feasibility-preserving backtracking line search (rejects steps that leave
     the barrier domain or the queue-stability region).
@@ -253,10 +308,15 @@ def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer
     ``solver`` picks the Newton direction: "structured" (default) is the
     analytic block-diagonal + Woodbury O(M) solve; "dense" is the autodiff
     jax.hessian + O((2M)³) jnp.linalg.solve escape hatch kept for parity
-    testing (tests/test_structured_newton.py pins the two within 1e-6)."""
+    testing (tests/test_structured_newton.py pins the two within 1e-6).
+
+    ``width`` (static) narrows every Erlang-C logsumexp from MAX_SERVERS to
+    the given width — exact whenever all container counts stay below it
+    (queueing._log_sum_k), and the dominant term in fleet-scale wall clock."""
 
     def strictly_feasible(x):
-        _, slacks = p1_barrier(x, 1.0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta)
+        _, slacks = p1_barrier(x, 1.0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta,
+                               width)
         rho = p1_rho(x, packed, n)
         return jnp.logical_and(jnp.all(slacks > 0), jnp.all(rho < 1.0 - 1e-7))
 
@@ -276,7 +336,7 @@ def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer
         # against
         def newton_step(x, _):
             val_fn = lambda xx: p1_barrier(
-                xx, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta
+                xx, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, width
             )[0]
             g = jax.grad(val_fn)(x)
             H = jax.hessian(val_fn)(x)
@@ -313,7 +373,7 @@ def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer
         # the first improvement — 1-2 heavy evaluations per step instead of
         # 2 per trial alpha
         val_fn = lambda xx: p1_barrier(
-            xx, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta
+            xx, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, width
         )[0]
 
         def newton_step(carry, _):
@@ -322,7 +382,7 @@ def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer
             # evaluation per tried alpha and none for the current point
             x, cur = carry
             dx = _newton_direction_structured(
-                x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta
+                x, t, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, width
             )
             alphas = jnp.asarray(_ALPHAS, x.dtype)
             feas = jax.vmap(lambda a: feasible_cheap(x - a * dx))(alphas)
@@ -364,38 +424,140 @@ def _ip_core(x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta, n_outer
     return x
 
 
-@partial(jax.jit, static_argnames=("n_outer", "n_inner", "solver", "t0"))
+@partial(jax.jit, static_argnames=("n_outer", "n_inner", "solver", "t0", "width"))
 def _ip_solve_batched(
     x0, packed, n, caps_cpu, caps_mem, power_span, alpha, beta,
-    n_outer=14, n_inner=24, solver="structured", t0=1.0,
+    n_outer=14, n_inner=24, solver="structured", t0=1.0, width=None,
 ):
     """One jitted vmap over a (B, 2M) batch of starts + (B, M) counts. Returns
     (x* (B, 2M), utility (B,))."""
 
     def one(x0_i, n_i):
         x = _ip_core(x0_i, packed, n_i, caps_cpu, caps_mem, power_span, alpha, beta,
-                     n_outer, n_inner, solver=solver, t0=t0)
-        u = p1_objective(x, packed, n_i, caps_cpu, caps_mem, power_span, alpha, beta)
+                     n_outer, n_inner, solver=solver, t0=t0, width=width)
+        u = p1_objective(x, packed, n_i, caps_cpu, caps_mem, power_span, alpha, beta, width)
         return x, u
 
     return jax.vmap(one)(x0, n)
 
 
 # ----------------------------------------------------------------------------
+# Row-wise P1 solve — the fleet placement layer's inner engine
+# ----------------------------------------------------------------------------
+def p1_app_ws(x, packed, n, width: int | None = None):
+    """Per-app response times at a solution x (masked sentinel slots -> 0)."""
+    M = packed["lam"].shape[0]
+    c, m = x[:M], x[M:]
+    mask = packed.get("mask")
+    _, n_ws = _mask_counts(packed, n)
+    d_ms = eq1_latency(
+        (packed["kappa"][..., 0], packed["kappa"][..., 1], packed["kappa"][..., 2]), c, m
+    )
+    mu = 1000.0 / (packed["xbar"] * d_ms)
+    ws = jax.vmap(partial(queueing.erlang_ws, width=width))(n_ws, packed["lam"], mu)
+    return ws if mask is None else jnp.where(mask > 0, ws, 0.0)
+
+
+def _rows_core(x0, packed_rows, n, caps_cpu, caps_mem, power_span, alpha, beta,
+               n_outer, n_inner, solver, t0, width):
+    """vmap over FULL per-row problems: unlike ``_ip_solve_batched`` (one
+    shared packing, many count vectors), every row here carries its own
+    packed-field stack AND its own (caps_cpu, caps_mem) budget — one row per
+    fleet node. Returns (x* (N, 2M), utility (N,), ws (N, M))."""
+
+    def one(x0_i, packed_i, n_i, ccpu_i, cmem_i):
+        x = _ip_core(x0_i, packed_i, n_i, ccpu_i, cmem_i, power_span, alpha, beta,
+                     n_outer, n_inner, solver=solver, t0=t0, width=width)
+        u = p1_objective(x, packed_i, n_i, ccpu_i, cmem_i, power_span, alpha, beta, width)
+        ws = p1_app_ws(x, packed_i, n_i, width)
+        return x, u, ws
+
+    return jax.vmap(one)(x0, packed_rows, n, caps_cpu, caps_mem)
+
+
+_ROWS_STATICS = ("n_outer", "n_inner", "solver", "t0", "width")
+_ip_solve_rows = partial(jax.jit, static_argnames=_ROWS_STATICS)(_rows_core)
+
+
+@partial(jax.jit, static_argnames=_ROWS_STATICS + ("mesh", "axis"))
+def _ip_solve_rows_sharded(
+    x0, packed_rows, n, caps_cpu, caps_mem, power_span, alpha, beta,
+    *, n_outer, n_inner, solver, t0, width, mesh, axis,
+):
+    """shard_map wrapper: row-stacked operands split along ``axis`` of
+    ``mesh`` (the mesh idiom of launch/mesh.py), scalars replicated. Rows are
+    independent, so out_specs is a plain gather — no collectives. The node
+    count must be divisible by the axis size; the placement layer's pow2
+    node padding guarantees that on pow2 meshes."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    row = P(axis)  # pytree prefix: applies to every leaf of packed_rows too
+    rep = P()
+    fn = shard_map(
+        partial(_rows_core, n_outer=n_outer, n_inner=n_inner, solver=solver,
+                t0=t0, width=width),
+        mesh=mesh,
+        in_specs=(row, row, row, row, row, rep, rep, rep),
+        out_specs=(row, row, row),
+        check_rep=False,
+    )
+    return fn(
+        x0, packed_rows, n, caps_cpu, caps_mem,
+        jnp.asarray(power_span), jnp.asarray(alpha), jnp.asarray(beta),
+    )
+
+
+def ip_solve_rows(
+    x0, packed_rows, n, caps_cpu, caps_mem, power_span, alpha, beta,
+    n_outer=8, n_inner=3, solver="structured", t0=1.0, width=None,
+    mesh=None, mesh_axis: str = "nodes",
+):
+    """Public row-wise solver: jit(vmap) on one device, or shard_map over
+    ``mesh_axis`` of ``mesh`` when a mesh is given. Both paths share
+    ``_rows_core``, so sharding cannot change the math. All operands are
+    row-stacked along the leading node axis: x0 (N, 2M), packed_rows a dict
+    of (N, M)/(N, M, 3) arrays (plus the (N, M) "mask" sentinel field),
+    n (N, M), caps_cpu/caps_mem (N,); power_span/alpha/beta are fleet-wide
+    scalars. Returns (x* (N, 2M), utility (N,), ws (N, M))."""
+    if mesh is None:
+        return _ip_solve_rows(
+            x0, packed_rows, n, caps_cpu, caps_mem, power_span, alpha, beta,
+            n_outer=n_outer, n_inner=n_inner, solver=solver, t0=t0, width=width,
+        )
+    return _ip_solve_rows_sharded(
+        x0, packed_rows, n, caps_cpu, caps_mem, power_span, alpha, beta,
+        n_outer=n_outer, n_inner=n_inner, solver=solver, t0=t0, width=width,
+        mesh=mesh, axis=mesh_axis,
+    )
+
+
+# ----------------------------------------------------------------------------
 # Phase-1 feasible start, vectorized over the batch (NumPy)
 # ----------------------------------------------------------------------------
-def find_feasible_start_batch(packed, caps: ServerCaps, n_batch, c_hint=None):
+def find_feasible_start_batch(packed, caps: ServerCaps, n_batch, c_hint=None, mask=None):
     """Phase-1 heuristic over a (B, M) batch of container-count vectors:
     memory waterfill + CPU proportional scaling + a stability repair pass.
     Rows with no strictly feasible interior point are masked (ok=False) and
-    their x0 contents are unspecified. Returns (x0 (B, 2M), ok (B,))."""
+    their x0 contents are unspecified. Returns (x0 (B, 2M), ok (B,)).
+
+    Generalizations used by the fleet placement layer (all transparent to the
+    single-server callers): packed fields may be per-row (B, M[, 3]) stacks,
+    ``caps`` fields may be (B,) arrays (one budget per row/node), and ``mask``
+    (B, M) marks sentinel slots — masked lanes are exempted from every
+    feasibility predicate (their latency cap is +inf, so the repair loop and
+    the hard-cap check ignore them) and land on their box center, matching
+    the frozen-coordinate convention of the masked interior point."""
     packed = as_packed(packed)
     n = np.asarray(n_batch, dtype=float)
     B, M = n.shape
     r_min, r_max = packed.r_min, packed.r_max
     cpu_min = packed.cpu_min
-    k1, k3 = packed.kappa[:, 0], packed.kappa[:, 2]
+    k1, k3 = packed.kappa[..., 0], packed.kappa[..., 2]
     lam, xbar = packed.lam, packed.xbar
+    if mask is not None:
+        mask = np.asarray(mask, dtype=bool)
+        n = n * mask  # sentinel slots budget nothing regardless of caller's n
     ok = np.ones(B, dtype=bool)
 
     with np.errstate(all="ignore"):
@@ -423,6 +585,10 @@ def find_feasible_start_batch(packed, caps: ServerCaps, n_batch, c_hint=None):
         # the latency cap, bare stabilizability) plus proportional headroom
         # toward a comfortable 60%-of-cap target, within the global budget
         d_cap_ms = 0.92 * n * 1000.0 / (lam * xbar)  # (B, M)
+        if mask is not None:
+            # sentinel lanes have no queue: no latency cap, never "bad"
+            d_cap_ms = np.where(mask, d_cap_ms, np.inf)
+        d_cap_ms = np.broadcast_to(d_cap_ms, (B, M))
         hard, soft = 0.9 * d_cap_ms, 0.6 * d_cap_ms
         ok &= ~np.any(hard <= 1.05, axis=1)  # latency cap below the e^0 floor
         floor = k3 / np.log(np.maximum(hard, 1.0 + 1e-12))
@@ -488,6 +654,13 @@ def find_feasible_start_batch(packed, caps: ServerCaps, n_batch, c_hint=None):
             _eq1_np(packed.kappa, c0, m0) >= d_hard_ms * (1.0 - 1e-7), axis=1
         )
 
+    if mask is not None:
+        # sentinel lanes start (and stay frozen) at their box center, keeping
+        # their barrier terms a finite constant for the masked interior point
+        c_mid = np.broadcast_to(0.5 * (cpu_min + packed.cpu_max), (B, M))
+        m_mid = np.broadcast_to(0.5 * (r_min + r_max), (B, M))
+        c0 = np.where(mask, c0, c_mid)
+        m0 = np.where(mask, m0, m_mid)
     x0 = np.concatenate([c0, m0], axis=1)
     return x0, ok
 
@@ -641,7 +814,11 @@ def _pad_pow2(B: int) -> int:
 # "refine" is the schedule the CRMS greedy refinement and the throughput
 # benchmark use: ~7x less Newton work for ≤2e-9 relative utility drift on the
 # evaluation scenarios (pinned by tests/test_engine.py and BENCH_solver.json).
-P1_PROFILES = {"reference": (14, 24), "refine": (12, 4)}
+# "fleet" is the placement layer's schedule: t0 covers 8 rounds of t *= 6 to
+# the same final barrier weight ballpark, and with per-node problems already
+# warm-started from ideal configs the remaining drift is ~1e-6 relative —
+# well inside the exchange loop's move-acceptance margins.
+P1_PROFILES = {"reference": (14, 24), "refine": (12, 4), "fleet": (8, 3)}
 
 
 def p1_solve_batch(
@@ -657,6 +834,7 @@ def p1_solve_batch(
     profile: str = "reference",
     solver: str = "structured",
     seed_grid: bool = False,
+    max_servers: int | None = None,
 ) -> P1BatchResult:
     """Solve Problem P1 (Eq. 26) for every row of a (B, M) batch of container
     counts in ONE vmapped interior-point call.
@@ -673,7 +851,11 @@ def p1_solve_batch(
     the coarse per-app (c, m) utility grid sweep (grid_seed_chints) at the
     head of the hint chain; rows where a hinted phase-1 fails fall back to
     the caller's ``c_hint`` and finally the plain waterfill, so hint sources
-    only ever add feasible rows.
+    only ever add feasible rows. ``max_servers`` narrows every Erlang-C
+    logsumexp from queueing.MAX_SERVERS to the given static width — EXACT
+    (not approximate) because every count in the batch must stay ≤ it, which
+    is validated eagerly; callers should pass a pow2 so distinct fleets share
+    one jit cache entry.
     """
     prof_outer, prof_inner = P1_PROFILES[profile]
     n_outer = prof_outer if n_outer is None else n_outer
@@ -682,6 +864,12 @@ def p1_solve_batch(
     n_np = np.asarray(n_batch, dtype=float)
     if n_np.ndim != 2:
         raise ValueError(f"n_batch must be (B, M), got shape {n_np.shape}")
+    if max_servers is not None and n_np.size and float(n_np.max()) > max_servers:
+        raise ValueError(
+            f"max_servers={max_servers} is below the largest container count "
+            f"{int(n_np.max())} in the batch — the narrowed Erlang sum would "
+            "no longer be exact"
+        )
     B, M = n_np.shape
     # Phase-1 hint chain: grid-seeded cells first (when enabled), then the
     # caller's hint (SP1 ideal / warm quotas), then the plain waterfill.
@@ -737,6 +925,7 @@ def p1_solve_batch(
         n_outer=n_outer,
         n_inner=n_inner,
         solver=solver,
+        width=max_servers,
     )
     x = np.asarray(x)[:B]
     u = np.asarray(u)[:B]
@@ -803,14 +992,16 @@ def sp1_solve_batch(apps, caps: ServerCaps, alpha: float, beta: float, iters: in
     return np.asarray(c), np.asarray(m)
 
 
-@jax.jit
-def _phi_grid(lam, mu, c, power_span, caps_cpu, alpha, beta, ns):
+@partial(jax.jit, static_argnames=("width",))
+def _phi_grid(lam, mu, c, power_span, caps_cpu, alpha, beta, ns, width=None):
     """Φ(N) of Eq. (23) on an (M, K) grid of container counts. ``alpha`` is a
-    per-app (M,) latency weight (a scalar is broadcast by the caller)."""
+    per-app (M,) latency weight (a scalar is broadcast by the caller).
+    ``width``: static Erlang-sum width — K itself is exact, since no grid
+    count exceeds K (see queueing._log_sum_k)."""
 
     def per_app(lam_i, mu_i, c_i, alpha_i):
         def per_n(n):
-            ws = queueing.erlang_ws(n, lam_i, mu_i)
+            ws = queueing.erlang_ws(n, lam_i, mu_i, width)
             dp = power_span * n * c_i / caps_cpu
             return alpha_i * ws + beta * dp / lam_i
 
@@ -819,10 +1010,18 @@ def _phi_grid(lam, mu, c, power_span, caps_cpu, alpha, beta, ns):
     return jax.vmap(per_app)(lam, mu, c, alpha)
 
 
-def sp2_argmin_batch(apps, caps: ServerCaps, alpha, beta, mu_star, c_star, m_star):
+def sp2_argmin_batch(apps, caps: ServerCaps, alpha, beta, mu_star, c_star, m_star,
+                     n_cap: int | None = None):
     """Vectorized SP2: per-app argmin of convex Φ over the stable feasible
     range [stability floor, cap-implied ceiling] — the exhaustive oracle the
-    serial ternary search is tested against, evaluated as one (M, K) grid."""
+    serial ternary search is tested against, evaluated as one (M, K) grid.
+
+    ``n_cap`` clamps the ceiling (and with it the grid width K and the Erlang
+    sum width): Φ is convex in N, so whenever the unconstrained argmin is
+    ≤ n_cap the result is identical, and a count that would exceed it comes
+    back clamped to n_cap. The fleet placement layer passes a small cap —
+    its per-app counts live far below the cap-implied single-server ceiling
+    — which turns the (M, K) sweep from K=512 to K=64."""
     packed = as_packed(apps)
     mu_star = np.asarray(mu_star, dtype=float)
     c_star = np.asarray(c_star, dtype=float)
@@ -832,7 +1031,8 @@ def sp2_argmin_batch(apps, caps: ServerCaps, alpha, beta, mu_star, c_star, m_sta
         dtype=int,
     )
     hi = np.minimum(caps.r_cpu / c_star, caps.r_mem / m_star).astype(int)
-    hi = np.minimum(np.maximum(hi, lo), queueing.MAX_SERVERS - 1)
+    cap = queueing.MAX_SERVERS - 1 if n_cap is None else min(n_cap, queueing.MAX_SERVERS - 1)
+    hi = np.minimum(np.maximum(hi, lo), cap)
     K = _pad_pow2(int(hi.max()))
     ns = jnp.arange(1, K + 1, dtype=jnp.float64)
     alpha_vec = np.broadcast_to(_alpha_arg(alpha), packed.lam.shape)
@@ -846,6 +1046,7 @@ def sp2_argmin_batch(apps, caps: ServerCaps, alpha, beta, mu_star, c_star, m_sta
             jnp.asarray(alpha_vec),
             float(beta),
             ns,
+            width=K,
         )
     )
     grid = np.arange(1, K + 1)
@@ -854,12 +1055,15 @@ def sp2_argmin_batch(apps, caps: ServerCaps, alpha, beta, mu_star, c_star, m_sta
     return grid[np.argmin(vals, axis=1)].astype(int)
 
 
-def ideal_configs_batch(apps, caps: ServerCaps, alpha: float, beta: float):
+def ideal_configs_batch(apps, caps: ServerCaps, alpha: float, beta: float,
+                        n_cap: int | None = None):
     """Algorithm 1's per-app ideal configs, vectorized over apps. Returns
-    (r_cpu* (M,), r_mem* (M,), n* (M,) int, mu* (M,))."""
+    (r_cpu* (M,), r_mem* (M,), n* (M,) int, mu* (M,)). ``n_cap`` bounds the
+    SP2 count search (see sp2_argmin_batch)."""
     packed = as_packed(apps)
     c_star, m_star = sp1_solve_batch(packed, caps, alpha, beta)
     d_ms = _eq1_np(packed.kappa, c_star, m_star)
     mu_star = 1000.0 / (packed.xbar * d_ms)
-    n_star = sp2_argmin_batch(packed, caps, alpha, beta, mu_star, c_star, m_star)
+    n_star = sp2_argmin_batch(packed, caps, alpha, beta, mu_star, c_star, m_star,
+                              n_cap=n_cap)
     return c_star, m_star, n_star, mu_star

@@ -24,9 +24,18 @@ from jax.scipy.special import gammaln
 MAX_SERVERS = 512
 
 
-def _log_sum_k(N, log_a):
-    """log Σ_{k=0}^{N-1} a^k / k!  as a masked logsumexp (fixed width)."""
-    ks = jnp.arange(MAX_SERVERS, dtype=log_a.dtype)
+def _log_sum_k(N, log_a, width: int | None = None):
+    """log Σ_{k=0}^{N-1} a^k / k!  as a masked logsumexp (fixed width).
+
+    ``width`` narrows the masked sum from MAX_SERVERS (the default) to a
+    caller-chosen static width. EXACT, not an approximation, whenever
+    N <= width: masked terms contribute exp(-inf) = 0 to the logsumexp, so
+    dropping them changes nothing. The fleet placement layer passes the
+    pow2 ceiling of its largest container count (~16 instead of 512), which
+    is the difference between a ~6x-slower and a sub-second 1000-node solve
+    on CPU — every Erlang evaluation in the interior point pays this width.
+    """
+    ks = jnp.arange(MAX_SERVERS if width is None else width, dtype=log_a.dtype)
     logs = ks * log_a - gammaln(ks + 1.0)
     mask = ks < N
     neg_inf = jnp.asarray(-jnp.inf, dtype=log_a.dtype)
@@ -34,7 +43,7 @@ def _log_sum_k(N, log_a):
     return jax.scipy.special.logsumexp(logs)
 
 
-def erlang_pi0(N, lam, mu):
+def erlang_pi0(N, lam, mu, width: int | None = None):
     """pi0 of Eq. (5): probability of an empty M/M/N system (log-space)."""
     N = jnp.asarray(N, dtype=jnp.result_type(float))
     lam = jnp.asarray(lam, dtype=N.dtype)
@@ -42,13 +51,13 @@ def erlang_pi0(N, lam, mu):
     log_a = jnp.log(lam) - jnp.log(mu)
     rho = lam / (N * mu)
     rho_safe = jnp.minimum(rho, 1.0 - 1e-9)
-    log_head = _log_sum_k(N, log_a)
+    log_head = _log_sum_k(N, log_a, width)
     log_tail = N * log_a - gammaln(N + 1.0) - jnp.log1p(-rho_safe)
     log_pi0 = -jnp.logaddexp(log_head, log_tail)
     return jnp.exp(log_pi0)
 
 
-def _erlang_log_lq(N, lam, mu):
+def _erlang_log_lq(N, lam, mu, width: int | None = None):
     """log Lq where Lq = pi0 * a^N * rho / (N! (1-rho)^2)   (queue part of Eq. 4)."""
     dtype = jnp.result_type(float)
     N = jnp.asarray(N, dtype=dtype)
@@ -57,7 +66,7 @@ def _erlang_log_lq(N, lam, mu):
     log_a = jnp.log(lam) - jnp.log(mu)
     rho = lam / (N * mu)
     rho_safe = jnp.minimum(rho, 1.0 - 1e-9)
-    log_head = _log_sum_k(N, log_a)
+    log_head = _log_sum_k(N, log_a, width)
     log_tail = N * log_a - gammaln(N + 1.0) - jnp.log1p(-rho_safe)
     log_pi0 = -jnp.logaddexp(log_head, log_tail)
     log_lq = (
@@ -70,23 +79,24 @@ def _erlang_log_lq(N, lam, mu):
     return log_lq, rho
 
 
-def erlang_ls(N, lam, mu):
+def erlang_ls(N, lam, mu, width: int | None = None):
     """Eq. (4): expected number of requests in the system. +inf when rho >= 1."""
-    log_lq, rho = _erlang_log_lq(N, lam, mu)
+    log_lq, rho = _erlang_log_lq(N, lam, mu, width)
     a = lam / mu
     ls = jnp.exp(log_lq) + a
     return jnp.where(rho < 1.0, ls, jnp.inf)
 
 
-def erlang_ws(N, lam, mu):
+def erlang_ws(N, lam, mu, width: int | None = None):
     """Eq. (7): expected response time per request (Little's law). +inf if unstable.
 
     Differentiable in ``lam``/``mu``/(continuous) ``N`` on the stable region.
+    ``width`` narrows the masked k-sum (exact for N <= width; see _log_sum_k).
     """
-    return erlang_ls(N, lam, mu) / lam
+    return erlang_ls(N, lam, mu, width) / lam
 
 
-def erlang_ws_derivs(N, lam, mu):
+def erlang_ws_derivs(N, lam, mu, width: int | None = None):
     """Closed-form (Ws, dWs/dmu, d²Ws/dmu²) on the stable region, for the
     structured Newton path of the P1 solver (engine._newton_direction_structured).
 
@@ -112,7 +122,7 @@ def erlang_ws_derivs(N, lam, mu):
     rho_s = jnp.minimum(rho, 1.0 - 1e-9)
     one_m = 1.0 - rho_s  # (1 - rho), the only small quantity here
     log_a = jnp.log(lam) - jnp.log(mu)
-    log_head = _log_sum_k(N, log_a)
+    log_head = _log_sum_k(N, log_a, width)
     log_tail = N * log_a - gammaln(N + 1.0) - jnp.log(one_m)
     C = jnp.exp(log_tail - jnp.logaddexp(log_head, log_tail))
 
