@@ -1,8 +1,9 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV lines
 # (plus human-readable detail) for: Table I, Figs 2-3, 6-10, 11-14, 15-22, the
 # M/M/N validation, the solver throughput sweep, the quasi-dynamic trace, the
-# cross-policy scenario matrix, the DES engine throughput gate, the TPU fleet
-# benchmark, the multi-node placement gates and the roofline report.
+# cross-policy scenario matrix, the burst-robustness curve, the DES engine
+# throughput gate, the TPU fleet benchmark, the multi-node placement gates and
+# the roofline report.
 #
 # CLI filters (CI and local runs can execute a single section):
 #   --only <section>[,<section>...]   run only the named sections (repeatable)
@@ -31,6 +32,7 @@ SECTIONS = (
     "solver_throughput",
     "quasidynamic_trace",
     "scenarios",
+    "burst_robustness",
     "des_throughput",
     "fleet_tpu",
     "fleet_placement",
@@ -43,6 +45,7 @@ ARTIFACTS = {
     "solver_throughput": ("BENCH_solver.json",),
     "quasidynamic_trace": ("BENCH_quasidynamic.json",),
     "scenarios": ("BENCH_scenarios.json",),
+    "burst_robustness": ("BENCH_burst.json",),
     "des_throughput": ("BENCH_des.json",),
     "fleet_placement": ("BENCH_fleet.json",),
 }

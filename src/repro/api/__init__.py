@@ -37,6 +37,13 @@ _EXPORTS = {
     # quasi-dynamic / predictive decorators
     "QuasiDynamicPolicy": "repro.api.quasidynamic",
     "PredictivePolicy": "repro.api.quasidynamic",
+    # arrival laws (bursty/MMPP + trace ingestion; home: repro.core.arrivals)
+    "ArrivalSpec": "repro.core.arrivals",
+    "mmpp2": "repro.core.arrivals",
+    "estimate_arrival": "repro.core.arrivals",
+    "read_invocation_csv": "repro.core.arrivals",
+    "idc_asymptotic": "repro.core.arrivals",
+    "idc_at": "repro.core.arrivals",
     # scenarios
     "Scenario": "repro.api.scenario",
     "ScenarioRunner": "repro.api.scenario",

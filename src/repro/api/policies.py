@@ -221,6 +221,75 @@ class CrmsFleetPolicy:
 register_policy("crms_fleet")(CrmsFleetPolicy())
 
 
+@register_policy("robust_crms")
+def robust_crms_policy(request: AllocRequest) -> AllocResult:
+    """Burstiness-robust CRMS: optimize against the top of each app's
+    [λ_mean, λ_hi] arrival-rate uncertainty interval instead of the mean.
+
+    Erlang-C Ws is increasing in λ, so the interval's worst case is its upper
+    endpoint: solving P1 at λ_eff = λ·(1 + t·(ratio − 1)) IS the worst-case
+    robust solve, reusing the whole structured-Newton pipeline unchanged.
+    Per-app ratios λ_hi/λ_mean come from ``request.extra``:
+
+    * ``"arrival_ratios"``: {app_name: ratio} — the ScenarioRunner injects
+      each app's MMPP peak-phase rate ratio (``ArrivalSpec.lam_hi_ratio``),
+      estimated from a trace or declared in the scenario;
+    * ``"robust"``: one explicit ratio for every app (wins when present).
+
+    The inflation backs off (t = 1 → 0 over a fixed ladder) until the solve
+    is feasible AND stable — full robustness when capacity allows, degrading
+    toward plain CRMS under pressure rather than failing. The returned
+    allocation is re-evaluated at the TRUE mean rates (the PredictivePolicy
+    idiom), so recorded utility/Ws describe the real operating point, not
+    the inflated one. With no ratios (pure Poisson) every app's interval
+    collapses and this policy is exactly ``crms`` — same draws, same answer.
+    Like ``crms``, any ``options.app_weights`` are stripped."""
+    import numpy as np
+
+    from repro.core.problem import evaluate
+
+    t0 = time.perf_counter()
+    options = request.options
+    if options.app_weights:
+        options = dataclasses.replace(options, app_weights=())
+    explicit = request.extra.get("robust")
+    ratio_map = request.extra.get("arrival_ratios") or {}
+    ratios = np.array(
+        [
+            float(explicit) if explicit is not None else float(ratio_map.get(a.name, 1.0))
+            for a in request.apps
+        ]
+    )
+    if np.any(ratios < 1.0):
+        raise ValueError(
+            f"robust_crms ratios must be >= 1 (lam_hi/lam_mean), got {ratios.min()}"
+        )
+    kw = dict(warm=request.warm, packed=request.packed, options=options)
+    if np.all(ratios == 1.0):
+        alloc = crms(request.apps, request.caps, request.alpha, request.beta, **kw)
+        return _result(alloc, "robust_crms", t0, robust_t=0.0, robust_ratio_max=1.0)
+    cand = None
+    for t in (1.0, 0.6, 0.35, 0.15, 0.0):
+        eff = [
+            a.with_lam(a.lam * (1.0 + t * (r - 1.0)))
+            for a, r in zip(request.apps, ratios)
+        ]
+        cand = crms(eff, request.caps, request.alpha, request.beta, **kw)
+        if cand.feasible and cand.stable:
+            break
+    # honest re-score at the true mean rates (t=0 re-evaluates to itself, so
+    # the fully-backed-off case stays numerically identical to plain crms)
+    alloc = evaluate(
+        request.apps, cand.n, cand.r_cpu, cand.r_mem,
+        request.caps, request.alpha, request.beta,
+    )
+    alloc.meta.update(cand.meta)
+    return _result(
+        alloc, "robust_crms", t0,
+        robust_t=float(t), robust_ratio_max=float(ratios.max()),
+    )
+
+
 def _register_predictive() -> None:
     # Imported here (not at module top): quasidynamic imports the registry,
     # which is mid-load while this module registers the built-ins.

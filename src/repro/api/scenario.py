@@ -30,6 +30,15 @@ from repro.api.types import (
     mean_latency_s,
     total_power_w,
 )
+from repro.core.arrivals import (
+    ARRIVAL_KINDS,
+    SERVICE_KINDS,
+    ArrivalSpec,
+    estimate_arrival,
+    parse_arrival,
+    read_invocation_csv,
+    validate_service,
+)
 from repro.core.problem import App, ServerCaps
 
 
@@ -179,6 +188,50 @@ class Scenario:
     drift: LambdaDrift | None = None
     options: SolverOptions = dataclasses.field(default_factory=SolverOptions)
     seed: int = 0
+    # DES off-model knobs (schema 2.2): the arrival law (None = Poisson; one
+    # spec for the whole fleet or a {app_name: spec} mapping) and the service
+    # law, validated eagerly here with the SAME single-source checks the
+    # FleetSimulator engines run (core/arrivals.py) — an invalid spec fails
+    # at construction, not mid-replay.
+    arrival: Any = None
+    service: str = "exp"
+    h2_scv: float = 4.0
+
+    def __post_init__(self):
+        validate_service(self.service, self.h2_scv)
+        if isinstance(self.arrival, Mapping) and "kind" not in self.arrival:
+            names = {a.name for a in self.apps} | {
+                ev.app.name for ev in self.events if isinstance(ev, AppJoin)
+            }
+            parsed = {}
+            for nm, sp in self.arrival.items():
+                if nm not in names:
+                    raise ValueError(
+                        f"arrival spec names unknown app {nm!r}; "
+                        f"known: {', '.join(sorted(names))}"
+                    )
+                parsed[nm] = parse_arrival(sp)
+            object.__setattr__(self, "arrival", parsed)
+        else:
+            object.__setattr__(self, "arrival", parse_arrival(self.arrival))
+
+    def arrival_for(self, name: str) -> ArrivalSpec:
+        """The (validated) arrival spec replayed for app ``name``."""
+        if isinstance(self.arrival, Mapping):
+            return self.arrival.get(name, ArrivalSpec())
+        return self.arrival
+
+    def arrival_doc(self):
+        """JSON-safe arrival description for the scenarios doc: None when the
+        whole fleet is Poisson, one spec dict, or {app_name: spec dict}."""
+        if isinstance(self.arrival, Mapping):
+            out = {
+                nm: sp.to_dict()
+                for nm, sp in self.arrival.items()
+                if sp.kind != "poisson"
+            }
+            return out or None
+        return None if self.arrival.kind == "poisson" else self.arrival.to_dict()
 
     @classmethod
     def from_tenant_mix(cls, name: str, M: int, **kw) -> "Scenario":
@@ -307,6 +360,96 @@ class Scenario:
             drift=drift, options=options, **kw,
         )
 
+    @classmethod
+    def from_trace(
+        cls,
+        apps: Sequence[App],
+        caps: ServerCaps,
+        *,
+        trace,
+        name: str = "trace",
+        bin_s: float = 60.0,
+        n_epochs: int | None = None,
+        lam_scale: float | None = None,
+        min_idc: float = 1.15,
+        **kw,
+    ) -> "Scenario":
+        """Ingest a real request log (Azure-Functions-style per-bin invocation
+        counts) into a replayable scenario: per-epoch λ re-estimation feeding
+        the existing drift trigger, plus a fitted burstiness (MMPP) arrival
+        spec per app driving the DES backend.
+
+        ``trace`` is either ``{row_name: counts}`` (1-D per-bin counts, bin
+        width ``bin_s`` seconds) or a path to a CSV in that shape
+        (``read_invocation_csv``). Rows map to ``apps`` by app name when every
+        app has a row, else by order (first M rows). The trace contributes the
+        *shape* of the workload — per-epoch relative rate variation (emitted
+        as ``LambdaSet`` events, so ``QuasiDynamicPolicy`` sees real drift)
+        and the fitted burstiness — while each template app's ``lam`` pins
+        the absolute operating point: by default every row is scaled so its
+        whole-trace mean rate equals the template λ (``lam_scale`` overrides
+        with one explicit factor; ``lam_scale=1.0`` replays raw trace rates).
+
+        ``n_epochs`` defaults to one epoch per 8 bins (≥ 2). Per-app specs
+        with estimated IDC ≤ ``min_idc`` stay Poisson — within counting noise
+        of the paper's model, burstiness inflation would only waste servers.
+        """
+        apps = tuple(apps)
+        if isinstance(trace, (str, bytes)) or hasattr(trace, "__fspath__"):
+            trace = read_invocation_csv(trace)
+        rows = dict(trace)
+        if not rows:
+            raise ValueError("trace has no rows")
+        if all(a.name in rows for a in apps):
+            matched = {a.name: np.asarray(rows[a.name], dtype=float) for a in apps}
+        else:
+            if len(rows) < len(apps):
+                raise ValueError(
+                    f"trace has {len(rows)} rows for {len(apps)} apps and the "
+                    "row names do not cover the app names"
+                )
+            matched = {
+                a.name: np.asarray(c, dtype=float)
+                for a, c in zip(apps, rows.values())
+            }
+        n_bins = min(c.shape[0] for c in matched.values())
+        if n_epochs is None:
+            n_epochs = max(n_bins // 8, 2)
+        if n_bins < n_epochs:
+            raise ValueError(
+                f"trace too short: {n_bins} bins for {n_epochs} epochs"
+            )
+        per_epoch = n_bins // n_epochs
+
+        base_apps = []
+        arrival: dict[str, ArrivalSpec] = {}
+        lam_by_epoch: list[dict[str, float]] = [dict() for _ in range(n_epochs)]
+        for app in apps:
+            counts = matched[app.name][: per_epoch * n_epochs]
+            est = estimate_arrival(counts, bin_s)
+            if est["lam"] <= 0.0:
+                raise ValueError(f"trace row for app {app.name!r} is all zeros")
+            scale = (
+                float(lam_scale) if lam_scale is not None else app.lam / est["lam"]
+            )
+            if est["idc"] > min_idc and est["spec"].kind == "mmpp":
+                arrival[app.name] = est["spec"]
+            window = counts.reshape(n_epochs, per_epoch)
+            lam_e = window.mean(axis=1) / float(bin_s) * scale
+            lam_e = np.maximum(lam_e, 1e-3 * max(float(lam_e.max()), 1.0))
+            base_apps.append(app.with_lam(float(lam_e[0])))
+            for e in range(1, n_epochs):
+                lam_by_epoch[e][app.name] = float(lam_e[e])
+        events = tuple(
+            LambdaSet(epoch=e, lam=lam_by_epoch[e])
+            for e in range(1, n_epochs)
+            if lam_by_epoch[e]
+        )
+        return cls(
+            name=name, apps=tuple(base_apps), caps=caps, n_epochs=n_epochs,
+            events=events, arrival=arrival or None, **kw,
+        )
+
     def timeline(self) -> list[EpochState]:
         """Expand events + drift into per-epoch states. Pure and
         deterministic: every policy replays exactly this trace."""
@@ -419,11 +562,22 @@ class _DesReplay:
     path ("vector") — epoch boundaries are exactly the segment boundaries the
     vector engine hands off at."""
 
-    def __init__(self, seed: int, epoch_s: float, engine: str = "event"):
+    def __init__(
+        self,
+        seed: int,
+        epoch_s: float,
+        engine: str = "event",
+        service: str = "exp",
+        h2_scv: float = 4.0,
+        arrival_for=None,
+    ):
         from repro.core.des import FleetSimulator
 
-        self.sim = FleetSimulator(seed=seed, engine=engine)
+        self.sim = FleetSimulator(
+            seed=seed, engine=engine, service=service, h2_scv=h2_scv
+        )
         self.epoch_s = float(epoch_s)
+        self._arrival_for = arrival_for  # name -> ArrivalSpec (None = Poisson)
         self._present: dict[int, list[str]] = {}  # epoch -> app names simulated
         self._live: set[str] = set()  # names currently receiving arrivals
 
@@ -440,7 +594,8 @@ class _DesReplay:
                 self.sim.configure(app.name, lam=app.lam, mu=mu, n_servers=n)
                 self.sim.activate(app.name)  # no-op unless re-joining
             else:
-                self.sim.add_app(app.name, app.lam, mu, n)
+                spec = self._arrival_for(app.name) if self._arrival_for else None
+                self.sim.add_app(app.name, app.lam, mu, n, arrival=spec)
         self._live = set(names)
         self._present[state.epoch] = names
         self.sim.run_until((state.epoch + 1) * self.epoch_s)
@@ -554,16 +709,36 @@ class ScenarioRunner:
                 "app_weights": dict(sc.options.app_weights),
                 "epoch_s": self.epoch_s,
                 "des_engine": self.des_engine,
+                "arrival": sc.arrival_doc(),
+                "service": sc.service,
             },
             "policies": {},
         }
+        # burstiness-aware policies (robust_crms) read the per-app peak-phase
+        # rate ratios from request.extra; explicit per-policy extras win
+        ratios = {}
+        for state in timeline:
+            for app in state.apps:
+                r = sc.arrival_for(app.name).lam_hi_ratio()
+                if r > 1.0:
+                    ratios[app.name] = r
         for policy in self.policies:
             driver = self._driver(policy)
             replay = (
-                _DesReplay(seed=sc.seed, epoch_s=self.epoch_s, engine=self.des_engine)
+                _DesReplay(
+                    seed=sc.seed,
+                    epoch_s=self.epoch_s,
+                    engine=self.des_engine,
+                    service=sc.service,
+                    h2_scv=sc.h2_scv,
+                    arrival_for=sc.arrival_for,
+                )
                 if self.backend == "des"
                 else None
             )
+            extra = dict(self.extra.get(policy.name, {}))
+            if ratios:
+                extra.setdefault("arrival_ratios", ratios)
             epochs = []
             for state in timeline:
                 request = AllocRequest(
@@ -573,7 +748,7 @@ class ScenarioRunner:
                     beta=sc.beta,
                     options=sc.options,
                     seed=sc.seed,
-                    extra=self.extra.get(policy.name, {}),
+                    extra=extra,
                 )
                 t0 = time.perf_counter()
                 result = driver.allocate(request)
@@ -814,9 +989,11 @@ class FleetScenarioRunner:
 
 
 # ----------------------------------------------------------------------------
-# Compact storage shape (schema 2.1): per-epoch series as parallel arrays
+# Compact storage shape (schema 2.1): per-epoch series as parallel arrays.
+# Schema 2.2 adds the scenario-level ``arrival``/``service`` law fields —
+# and the validator REJECTS unknown kinds instead of silently passing them.
 # ----------------------------------------------------------------------------
-SCHEMA_MINOR = 1
+SCHEMA_MINOR = 2
 
 
 def compact_scenarios_doc(doc: Mapping) -> dict:
@@ -1002,6 +1179,43 @@ def _validate_one(doc: Mapping, root: str = "$") -> None:
             f"{root}.scenario.des_engine",
             f"must be one of {_DES_ENGINES}",
         )
+    # schema 2.2 arrival/service law fields — optional for back-compat, but an
+    # unknown kind is an ERROR, never a silent pass
+    if sc.get("service") is not None:
+        need(
+            sc["service"] in SERVICE_KINDS,
+            f"{root}.scenario.service",
+            f"must be one of {SERVICE_KINDS}",
+        )
+    if sc.get("arrival") is not None:
+        arr = sc["arrival"]
+        need(
+            isinstance(arr, Mapping),
+            f"{root}.scenario.arrival",
+            "must be an arrival-spec object or a {app: spec} mapping",
+        )
+        specs = {"": arr} if "kind" in arr else dict(arr)
+        need(
+            len(specs) > 0,
+            f"{root}.scenario.arrival",
+            "per-app arrival mapping must be non-empty (use null for Poisson)",
+        )
+        for app_name, sp in specs.items():
+            at = f"{root}.scenario.arrival" + (f"[{app_name}]" if app_name else "")
+            need(isinstance(sp, Mapping), at, "each arrival spec must be an object")
+            need(
+                sp.get("kind") in ARRIVAL_KINDS,
+                f"{at}.kind",
+                f"must be one of {ARRIVAL_KINDS}",
+            )
+            if sp.get("kind") == "mmpp":
+                rates, sojourn = sp.get("rates"), sp.get("sojourn")
+                need(
+                    isinstance(rates, list) and isinstance(sojourn, list)
+                    and len(rates) == len(sojourn) >= 2,
+                    f"{at}",
+                    "mmpp specs need matching rates/sojourn lists of >= 2 phases",
+                )
     for wname, wval in sc["app_weights"].items():
         need(
             isinstance(wval, (int, float)) and wval > 0,

@@ -40,6 +40,11 @@ Design points (DESIGN.md §10):
   squared coefficient of variation ``h2_scv`` (> 1), the first non-Poisson
   knob of the ROADMAP follow-on. Erlang-C-optimized allocations degrade
   measurably under H2 — the off-model gap the DES exists to expose.
+* **Arrival law** — ``arrival=None`` (Poisson, the paper's model) or an
+  MMPP spec (``core/arrivals.py``): a Markov-modulated Poisson process whose
+  modulating chain and gap draws live in a shared ``ArrivalStream`` consumed
+  by BOTH engines, so bursty arrivals keep exact CRN engine parity. Per-app
+  overrides via ``add_app(..., arrival=...)``.
 """
 from __future__ import annotations
 
@@ -51,23 +56,18 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core.arrivals import (  # noqa: F401  (re-exported: historical home)
+    _CHUNK,
+    ArrivalStream,
+    _stream,
+    h2_params,
+    parse_arrival,
+    validate_service,
+)
+
 _ARRIVAL, _DEPART = 0, 1
-_CHUNK = 4096  # batched RNG draw size (vectorized event batching)
 _ENGINES = ("event", "vector")
 _SERVICES = ("exp", "h2")
-
-
-def h2_params(mu: float, scv: float) -> tuple[float, float, float]:
-    """Balanced-means hyperexponential fit: (p, mu1, mu2) such that the
-    mixture p·Exp(mu1) + (1-p)·Exp(mu2) has mean 1/mu and squared
-    coefficient of variation ``scv`` (>= 1), with each branch contributing
-    half the mean (p/mu1 = (1-p)/mu2)."""
-    if scv < 1.0:
-        raise ValueError(f"h2_scv must be >= 1 (got {scv}); scv=1 is exponential")
-    if scv == 1.0:
-        return 1.0, float(mu), float(mu)
-    p = 0.5 * (1.0 + math.sqrt((scv - 1.0) / (scv + 1.0)))
-    return p, 2.0 * p * mu, 2.0 * (1.0 - p) * mu
 
 
 def _service_chunk(
@@ -98,12 +98,12 @@ class _Cluster:
 
     __slots__ = (
         "name", "lam", "mu", "n_servers", "busy", "queue", "version", "active",
-        "arr_rng", "svc_rng", "_arr_buf", "_arr_pos", "_svc_buf", "_svc_pos",
+        "arr", "svc_rng", "_svc_buf", "_svc_pos",
         "arr_log", "resp_log", "n_arrived", "qlen_integral", "busy_time",
         "last_t", "service", "h2_scv",
     )
 
-    def __init__(self, name, lam, mu, n_servers, arr_rng, svc_rng, t0,
+    def __init__(self, name, lam, mu, n_servers, arr, svc_rng, t0,
                  service="exp", h2_scv=4.0):
         self.name = name
         self.lam = float(lam)
@@ -115,10 +115,8 @@ class _Cluster:
         self.queue: deque[float] = deque()  # arrival times of waiting requests
         self.version = 0  # bumps on λ reconfig; stale arrival events are dropped
         self.active = True  # arrivals enabled
-        self.arr_rng = arr_rng
+        self.arr: ArrivalStream = arr  # shared-with-vector-engine CRN stream
         self.svc_rng = svc_rng
-        self._arr_buf = np.empty(0)
-        self._arr_pos = 0
         self._svc_buf = np.empty(0)
         self._svc_pos = 0
         self.arr_log: list[float] = []  # arrival time of each COMPLETED request
@@ -127,14 +125,6 @@ class _Cluster:
         self.qlen_integral = 0.0
         self.busy_time = 0.0
         self.last_t = float(t0)
-
-    def next_interarrival(self) -> float:
-        if self._arr_pos >= self._arr_buf.shape[0]:
-            self._arr_buf = self.arr_rng.exponential(1.0 / self.lam, size=_CHUNK)
-            self._arr_pos = 0
-        v = self._arr_buf[self._arr_pos]
-        self._arr_pos += 1
-        return float(v)
 
     def next_service(self) -> float:
         if self._svc_pos >= self._svc_buf.shape[0]:
@@ -153,14 +143,6 @@ class _Cluster:
             self.qlen_integral += len(self.queue) * dt
             self.busy_time += self.busy * dt
             self.last_t = t
-
-
-def _stream(seed: int, name: str, salt: int) -> np.random.Generator:
-    """Deterministic per-(seed, app, purpose) RNG stream. Arrival streams use
-    salt 17 and depend on (seed, name) ONLY, so two policies replaying the
-    same scenario see identical arrival processes (common random numbers)."""
-    key = np.frombuffer(name.encode("utf-8"), dtype=np.uint8)
-    return np.random.default_rng([int(seed) & 0x7FFFFFFF, salt, *key.tolist()])
 
 
 class FleetSimulator:
@@ -205,28 +187,30 @@ class FleetSimulator:
         engine: str = "event",
         service: str = "exp",
         h2_scv: float = 4.0,
+        arrival=None,
     ):
-        if service not in _SERVICES:
-            raise ValueError(f"service must be one of {_SERVICES}, got {service!r}")
-        if service == "h2":
-            h2_params(1.0, h2_scv)  # validate scv early
+        validate_service(service, h2_scv)  # eager, single-source (arrivals.py)
         self.t = 0.0
         self.seed = int(seed)
         self.service = service
         self.h2_scv = float(h2_scv)
+        self.arrival = parse_arrival(arrival)  # fleet default; per-app override
         self._heap: list[tuple] = []  # (t, seq, kind, name, aux)
         self._seq = 0
         self._clusters: dict[str, _Cluster] = {}
 
     # ------------------------------------------------------------------ admin
-    def add_app(self, name: str, lam: float, mu: float, n_servers: int) -> None:
+    def add_app(
+        self, name: str, lam: float, mu: float, n_servers: int, arrival=None
+    ) -> None:
         if name in self._clusters:
             raise ValueError(f"app {name!r} already simulated")
         if mu <= 0 or n_servers < 0:
             raise ValueError(f"app {name!r}: need mu > 0 and n_servers >= 0")
+        spec = self.arrival if arrival is None else parse_arrival(arrival)
         cl = _Cluster(
             name, lam, mu, n_servers,
-            arr_rng=_stream(self.seed, name, 17),
+            arr=ArrivalStream(spec, lam, self.seed, name, self.t),
             svc_rng=_stream(self.seed, name, 29),
             t0=self.t,
             service=self.service,
@@ -249,7 +233,7 @@ class FleetSimulator:
         if lam is not None and float(lam) != cl.lam:
             cl.lam = float(lam)
             cl.version += 1  # supersede the pending arrival (memorylessness)
-            cl._arr_buf = np.empty(0)
+            cl.arr.set_lam(float(lam), self.t)
             self._push_arrival(cl)
         if mu is not None and float(mu) != cl.mu:
             if mu <= 0:
@@ -266,6 +250,7 @@ class FleetSimulator:
         cl.advance(self.t)
         cl.active = False
         cl.version += 1  # cancel the pending arrival event
+        cl.arr.deactivate()
 
     def activate(self, name: str) -> None:
         """Re-enable arrivals on a retired cluster (a tenant re-joining)."""
@@ -275,6 +260,7 @@ class FleetSimulator:
         cl.advance(self.t)
         cl.active = True
         cl.version += 1
+        cl.arr.reactivate(self.t)
         self._push_arrival(cl)
 
     def apps(self) -> list[str]:
@@ -296,6 +282,7 @@ class FleetSimulator:
                     continue  # superseded by a reconfig/retire
                 cl.advance(t)
                 cl.n_arrived += 1
+                cl.arr.pop()  # consume this arrival; draws the next pending
                 self._push_arrival(cl)
                 if cl.busy < cl.n_servers:
                     cl.busy += 1
@@ -332,8 +319,9 @@ class FleetSimulator:
         heapq.heappush(self._heap, (t, self._seq, kind, name, aux))
 
     def _push_arrival(self, cl: _Cluster) -> None:
-        if cl.active and cl.lam > 0.0:
-            self._push(self.t + cl.next_interarrival(), _ARRIVAL, cl.name, cl.version)
+        t_next = cl.arr.peek()  # the stream's single drawn-ahead arrival
+        if cl.active and t_next is not None:
+            self._push(t_next, _ARRIVAL, cl.name, cl.version)
 
     def _push_depart(self, cl: _Cluster, t_arr: float) -> None:
         self._push(self.t + cl.next_service(), _DEPART, cl.name, t_arr)
@@ -479,13 +467,16 @@ def simulate_mmn(
     engine: str = "event",
     service: str = "exp",
     h2_scv: float = 4.0,
+    arrival=None,
 ) -> SimStats:
     """Single M/M/N cluster (the B=1 fleet). Response time = wait + service.
 
     All statistics — the response log AND the queue/utilization integrals —
     exclude the [0, warmup_s) transient; arrivals inside the measurement
     window are always completed (post-horizon drain), never truncated."""
-    sim = FleetSimulator(seed=seed, engine=engine, service=service, h2_scv=h2_scv)
+    sim = FleetSimulator(
+        seed=seed, engine=engine, service=service, h2_scv=h2_scv, arrival=arrival
+    )
     sim.add_app("mmn", lam, mu, n_servers)
     sim.run_until(warmup_s)
     snap = sim.snapshot("mmn")
@@ -505,12 +496,14 @@ def simulate_mmn(
 
 
 def simulate_allocation(apps, allocation, horizon_s=2000.0, warmup_s=200.0, seed=0,
-                        engine="event", service="exp", h2_scv=4.0):
+                        engine="event", service="exp", h2_scv=4.0, arrival=None):
     """Simulate every app cluster of an Allocation in ONE fleet loop;
     returns per-app SimStats (same order as ``apps``)."""
     from repro.core.problem import service_rate
 
-    sim = FleetSimulator(seed=seed, engine=engine, service=service, h2_scv=h2_scv)
+    sim = FleetSimulator(
+        seed=seed, engine=engine, service=service, h2_scv=h2_scv, arrival=arrival
+    )
     for i, app in enumerate(apps):
         mu = float(service_rate(app, allocation.r_cpu[i], allocation.r_mem[i]))
         sim.add_app(app.name, app.lam, mu, int(allocation.n[i]))

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.arrivals import ArrivalStream, parse_arrival
 from repro.core.des import (
     _CHUNK,
     FleetSimulator,
@@ -158,12 +159,13 @@ class _VecCluster:
 
     __slots__ = (
         "name", "lam", "mu", "n_servers", "active", "service", "h2_scv",
-        "arr_rng", "svc_rng", "_arr_buf", "_arr_pos", "_svc_buf", "_svc_pos",
-        "pending_t", "inflight", "queue_t", "queue_s",
+        "arr", "svc_rng", "_svc_buf", "_svc_pos",
+        "inflight", "queue_t", "queue_s",
         "log_t", "log_w", "log_s", "_log_cache", "n_arrived",
     )
 
-    def __init__(self, name, lam, mu, n_servers, seed, t0, service, h2_scv):
+    def __init__(self, name, lam, mu, n_servers, seed, t0, service, h2_scv,
+                 arrival=None):
         self.name = name
         self.lam = float(lam)
         self.mu = float(mu)
@@ -171,13 +173,12 @@ class _VecCluster:
         self.active = True
         self.service = service
         self.h2_scv = float(h2_scv)
-        self.arr_rng = _stream(seed, name, 17)
+        # the SAME chunked stream object the event engine consumes: one
+        # drawn-ahead pending arrival, phase chain resolved eagerly
+        self.arr = ArrivalStream(arrival, lam, seed, name, t0)
         self.svc_rng = _stream(seed, name, 29)
-        self._arr_buf = np.empty(0)
-        self._arr_pos = 0
         self._svc_buf = np.empty(0)
         self._svc_pos = 0
-        self.pending_t: float | None = None
         self.inflight = np.empty(0)  # absolute completion times, > clock
         self.queue_t = np.empty(0)  # waiting customers: true arrival times
         self.queue_s = np.empty(0)  # ...and their already-drawn service times
@@ -188,38 +189,12 @@ class _VecCluster:
         self.n_arrived = 0
 
     # --------------------------------------------------------- CRN streams
-    def next_gap(self) -> float:
-        """One inter-arrival draw — same chunk recipe as the event engine."""
-        if self._arr_pos >= self._arr_buf.shape[0]:
-            self._arr_buf = self.arr_rng.exponential(1.0 / self.lam, size=_CHUNK)
-            self._arr_pos = 0
-        v = self._arr_buf[self._arr_pos]
-        self._arr_pos += 1
-        return float(v)
-
     def arrivals_until(self, t_end: float) -> np.ndarray:
-        """Absolute arrival times <= t_end, consuming the chunked stream by
-        cumsum; leaves the overshoot arrival pending (exactly one drawn-ahead
-        arrival at all times, like the event engine's heap entry)."""
-        if not self.active or self.pending_t is None or self.pending_t > t_end:
-            return np.empty(0)
-        chunks = [np.array([self.pending_t])]
-        last = self.pending_t
-        while True:
-            if self._arr_pos >= self._arr_buf.shape[0]:
-                self._arr_buf = self.arr_rng.exponential(1.0 / self.lam, size=_CHUNK)
-                self._arr_pos = 0
-            ts = last + np.cumsum(self._arr_buf[self._arr_pos:])
-            k = int(np.searchsorted(ts, t_end, side="right"))
-            if k < ts.shape[0]:
-                chunks.append(ts[:k])
-                self._arr_pos += k + 1
-                self.pending_t = float(ts[k])
-                break
-            chunks.append(ts)
-            self._arr_pos = self._arr_buf.shape[0]
-            last = float(ts[-1])
-        arr = np.concatenate(chunks)
+        """Absolute arrival times <= t_end — the stream's batched
+        phase-conditioned cumsum pull; leaves the overshoot arrival pending
+        (exactly one drawn-ahead arrival, like the event engine's heap
+        entry)."""
+        arr = self.arr.times_until(t_end)
         self.n_arrived += arr.shape[0]
         return arr
 
@@ -306,28 +281,30 @@ class VectorFleetSimulator(FleetSimulator):
         service: str = "exp",
         h2_scv: float = 4.0,
         backend: str = "auto",
+        arrival=None,
     ):
         if engine != "vector":
             raise ValueError(f"VectorFleetSimulator is engine='vector', got {engine!r}")
         if backend not in ("auto", "jax", "numpy"):
             raise ValueError(f"backend must be auto|jax|numpy, got {backend!r}")
-        super().__init__(seed=seed, service=service, h2_scv=h2_scv)
+        super().__init__(seed=seed, service=service, h2_scv=h2_scv, arrival=arrival)
         self.backend = backend
         self._clusters: dict[str, _VecCluster] = {}
 
     # ------------------------------------------------------------------ admin
-    def add_app(self, name: str, lam: float, mu: float, n_servers: int) -> None:
+    def add_app(
+        self, name: str, lam: float, mu: float, n_servers: int, arrival=None
+    ) -> None:
         if name in self._clusters:
             raise ValueError(f"app {name!r} already simulated")
         if mu <= 0 or n_servers < 0:
             raise ValueError(f"app {name!r}: need mu > 0 and n_servers >= 0")
+        spec = self.arrival if arrival is None else parse_arrival(arrival)
         cl = _VecCluster(
             name, lam, mu, n_servers, seed=self.seed, t0=self.t,
-            service=self.service, h2_scv=self.h2_scv,
+            service=self.service, h2_scv=self.h2_scv, arrival=spec,
         )
         self._clusters[name] = cl
-        if cl.lam > 0.0:
-            cl.pending_t = self.t + cl.next_gap()
 
     def configure(self, name, lam=None, mu=None, n_servers=None) -> None:
         """Segment boundary at the current instant; see the module docstring
@@ -335,11 +312,7 @@ class VectorFleetSimulator(FleetSimulator):
         cl = self._cluster(name)
         if lam is not None and float(lam) != cl.lam:
             cl.lam = float(lam)
-            cl._arr_buf = np.empty(0)  # supersede the pending arrival
-            cl._arr_pos = 0
-            cl.pending_t = (
-                self.t + cl.next_gap() if cl.active and cl.lam > 0.0 else None
-            )
+            cl.arr.set_lam(float(lam), self.t)  # supersede the pending arrival
         if mu is not None and float(mu) != cl.mu:
             if mu <= 0:
                 raise ValueError(f"app {name!r}: mu must be > 0")
@@ -359,15 +332,14 @@ class VectorFleetSimulator(FleetSimulator):
     def retire(self, name: str) -> None:
         cl = self._cluster(name)
         cl.active = False
-        cl.pending_t = None  # the consumed draw is discarded, as in the oracle
+        cl.arr.deactivate()  # the consumed draw is discarded, as in the oracle
 
     def activate(self, name: str) -> None:
         cl = self._cluster(name)
         if cl.active:
             return
         cl.active = True
-        if cl.lam > 0.0:
-            cl.pending_t = self.t + cl.next_gap()
+        cl.arr.reactivate(self.t)
 
     # ------------------------------------------------------------- event loop
     def run_until(self, t_end: float) -> None:
@@ -382,7 +354,7 @@ class VectorFleetSimulator(FleetSimulator):
         already computed in-flight completions, so draining is one unbounded
         segment over the replay queues."""
         for cl in self._clusters.values():
-            cl.pending_t = None
+            cl.arr.cancel_pending()
         t_done = self._simulate_segment(np.inf, drain=True)
         self.t = max(self.t, t_done)
 

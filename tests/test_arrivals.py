@@ -1,0 +1,325 @@
+"""Arrival-law module (core/arrivals.py) and its consumers: spec validation
+single-sourced across both DES engines and the Scenario layer (same eager
+errors, same messages), MMPP model moments, trace ingestion
+(estimate_arrival / read_invocation_csv / Scenario.from_trace), and the
+burstiness-robust allocation policy ``robust_crms``."""
+import re
+
+import numpy as np
+import pytest
+
+from repro.api import AllocRequest, Scenario, ScenarioRunner, allocate
+from repro.core.arrivals import (
+    POISSON,
+    ArrivalSpec,
+    estimate_arrival,
+    idc_asymptotic,
+    idc_at,
+    mmpp2,
+    parse_arrival,
+    read_invocation_csv,
+)
+from repro.core.des import FleetSimulator
+from repro.core.problem import ServerCaps
+from repro.core.profiler import make_paper_apps
+
+CAPS = ServerCaps(30.0, 10.0)
+ROOMY = ServerCaps(60.0, 20.0)
+
+
+@pytest.fixture(scope="module")
+def apps():
+    return make_paper_apps(lam=(8, 7, 10, 15), fitted=False)
+
+
+# ----------------------------------------------------------------------------
+# ArrivalSpec: normalization + moments
+# ----------------------------------------------------------------------------
+def test_spec_normalizes_stationary_mean_rate():
+    spec = mmpp2(burst=4.0, frac=0.15, cycle=40.0)
+    pi = np.asarray(spec.stationary)
+    assert pi.sum() == pytest.approx(1.0)
+    assert pi[1] == pytest.approx(0.15)  # burst-phase occupancy = frac
+    # lam stays the long-run mean rate: sum_i pi_i * rates_i == 1
+    assert float(pi @ np.asarray(spec.rates)) == pytest.approx(1.0)
+    assert spec.lam_hi_ratio() == pytest.approx(4.0)
+    assert POISSON.lam_hi_ratio() == 1.0
+
+
+def test_spec_to_dict_parse_round_trip():
+    spec = mmpp2(burst=3.0, frac=0.2, cycle=100.0, phase0=1)
+    assert parse_arrival(spec.to_dict()) == spec
+    assert parse_arrival(None) == POISSON
+    assert parse_arrival("poisson") == POISSON
+    assert POISSON.to_dict() == {"kind": "poisson"}
+
+
+def test_idc_model_moments():
+    assert idc_asymptotic(POISSON, 5.0) == 1.0
+    assert idc_at(POISSON, 5.0, 60.0) == 1.0
+    spec = mmpp2(burst=3.0, frac=0.2, cycle=600.0)
+    idc_inf = idc_asymptotic(spec, 20.0)
+    assert idc_inf > 100.0  # slow modulation at rate 20: strongly bursty
+    # finite-window IDC: ~Poisson at tiny windows, -> IDC(inf), monotone
+    assert idc_at(spec, 20.0, 1e-6) == pytest.approx(1.0, abs=1e-3)
+    assert idc_at(spec, 20.0, 1e9) == pytest.approx(idc_inf, rel=1e-6)
+    windows = [10.0, 60.0, 600.0, 6000.0]
+    vals = [idc_at(spec, 20.0, t) for t in windows]
+    assert vals == sorted(vals)
+    # burstier chains are more overdispersed at every timescale
+    hotter = mmpp2(burst=4.5, frac=0.2, cycle=600.0)
+    assert idc_asymptotic(hotter, 20.0) > idc_inf
+
+
+# ----------------------------------------------------------------------------
+# Validation: one source of truth, pinned messages
+# ----------------------------------------------------------------------------
+def test_spec_validation_errors_pinned():
+    with pytest.raises(ValueError, match=re.escape(
+        "arrival kind must be one of ('poisson', 'mmpp'), got 'weird'"
+    )):
+        ArrivalSpec(kind="weird")
+    with pytest.raises(ValueError, match="poisson arrivals take no"):
+        ArrivalSpec(kind="poisson", rates=(1.0, 2.0))
+    with pytest.raises(ValueError, match="mmpp needs >= 2 phases"):
+        ArrivalSpec(kind="mmpp", rates=(1.0,), sojourn=(5.0,))
+    with pytest.raises(ValueError, match="mmpp rates must be finite and >= 0"):
+        ArrivalSpec(kind="mmpp", rates=(1.0, -2.0), sojourn=(5.0, 5.0))
+    with pytest.raises(ValueError, match="mmpp sojourn times must be finite and > 0"):
+        ArrivalSpec(kind="mmpp", rates=(1.0, 2.0), sojourn=(5.0, 0.0))
+    with pytest.raises(ValueError, match="row-stochastic with zero diagonal"):
+        ArrivalSpec(
+            kind="mmpp", rates=(1.0, 2.0), sojourn=(5.0, 5.0),
+            switch=((0.5, 0.5), (1.0, 0.0)),
+        )
+    with pytest.raises(ValueError, match=r"phase0 must be in \[0, 2\)"):
+        ArrivalSpec(kind="mmpp", rates=(1.0, 2.0), sojourn=(5.0, 5.0), phase0=2)
+
+
+def test_mmpp2_constructor_errors_pinned():
+    with pytest.raises(ValueError, match="burst factor must be >= 1"):
+        mmpp2(0.5, 0.2, 60.0)
+    with pytest.raises(ValueError, match=r"burst fraction must be in \(0, 1\)"):
+        mmpp2(2.0, 1.0, 60.0)
+    with pytest.raises(ValueError, match="cycle must be > 0"):
+        mmpp2(2.0, 0.2, 0.0)
+    with pytest.raises(ValueError, match=re.escape("burst*frac must be < 1")):
+        mmpp2(4.0, 0.3, 60.0)
+
+
+def test_parse_arrival_rejects_unknown_kinds():
+    msg = re.escape("arrival kind must be one of ('poisson', 'mmpp'), got 'selfsimilar'")
+    with pytest.raises(ValueError, match=msg):
+        parse_arrival("selfsimilar")
+    with pytest.raises(ValueError, match=msg):
+        parse_arrival({"kind": "selfsimilar"})
+    with pytest.raises(TypeError, match="cannot parse arrival spec"):
+        parse_arrival(42)
+
+
+def test_service_validation_single_source(apps):
+    """Both engines and the Scenario layer reject a bad service law with the
+    SAME eager error — no silent pass anywhere."""
+    msg = re.escape("service must be one of ('exp', 'h2'), got 'pareto'")
+    for build in (
+        lambda: FleetSimulator(seed=0, service="pareto"),
+        lambda: FleetSimulator(seed=0, engine="vector", service="pareto"),
+        lambda: Scenario(name="x", apps=tuple(apps), caps=CAPS, service="pareto"),
+    ):
+        with pytest.raises(ValueError, match=msg):
+            build()
+    for build in (
+        lambda: FleetSimulator(seed=0, service="h2", h2_scv=0.5),
+        lambda: Scenario(name="x", apps=tuple(apps), caps=CAPS,
+                         service="h2", h2_scv=0.5),
+    ):
+        with pytest.raises(ValueError, match="h2_scv must be >= 1"):
+            build()
+
+
+def test_arrival_validation_single_source(apps):
+    """Same contract for the arrival law: engines (constructor and add_app)
+    and Scenario raise the identical parse_arrival message."""
+    msg = re.escape("arrival kind must be one of ('poisson', 'mmpp'), got 'selfsimilar'")
+    for build in (
+        lambda: FleetSimulator(seed=0, arrival="selfsimilar"),
+        lambda: FleetSimulator(seed=0, engine="vector", arrival="selfsimilar"),
+        lambda: Scenario(name="x", apps=tuple(apps), caps=CAPS,
+                         arrival={"kind": "selfsimilar"}),
+    ):
+        with pytest.raises(ValueError, match=msg):
+            build()
+    sim = FleetSimulator(seed=0)
+    with pytest.raises(ValueError, match=msg):
+        sim.add_app("a", lam=1.0, mu=1.0, n_servers=1, arrival="selfsimilar")
+    # per-app scenario mappings must name real apps
+    with pytest.raises(ValueError, match="arrival spec names unknown app 'ghost'"):
+        Scenario(name="x", apps=tuple(apps), caps=CAPS,
+                 arrival={"ghost": mmpp2(2.0, 0.2, 60.0)})
+
+
+# ----------------------------------------------------------------------------
+# Trace ingestion
+# ----------------------------------------------------------------------------
+def test_estimate_arrival_poisson_stays_poisson():
+    rng = np.random.default_rng(0)
+    counts = rng.poisson(100.0, size=500)
+    est = estimate_arrival(counts, bin_s=60.0)
+    assert est["spec"].kind == "poisson"
+    assert est["lam"] == pytest.approx(100.0 / 60.0, rel=0.05)
+    assert est["idc"] == pytest.approx(1.0, abs=0.2)
+
+
+def test_estimate_arrival_threshold_fit_recovers_phases():
+    # deterministic 8-low/2-high square wave: frac=0.2, burst=240/96=2.5,
+    # burst run length 2 bins -> cycle = 2*60/0.2 = 600 s
+    counts = np.tile([60.0] * 8 + [240.0] * 2, 20)
+    est = estimate_arrival(counts, bin_s=60.0)
+    spec = est["spec"]
+    assert spec.kind == "mmpp"
+    assert est["idc"] > 1.15
+    assert spec.lam_hi_ratio() == pytest.approx(2.5, rel=1e-6)
+    assert spec.sojourn[1] == pytest.approx(120.0)  # burst phase: 2 bins
+    assert spec.sojourn[0] == pytest.approx(480.0)
+    assert np.asarray(spec.stationary)[1] == pytest.approx(0.2)
+
+
+def test_estimate_arrival_errors_and_degenerate_inputs():
+    with pytest.raises(ValueError, match="counts must be a 1-D series"):
+        estimate_arrival([5.0])
+    with pytest.raises(ValueError, match="bin_s must be > 0"):
+        estimate_arrival([1.0, 2.0], bin_s=0.0)
+    with pytest.raises(ValueError, match="counts must be finite and >= 0"):
+        estimate_arrival([1.0, -2.0])
+    est = estimate_arrival([0.0, 0.0, 0.0])
+    assert est["lam"] == 0.0 and est["spec"].kind == "poisson"
+
+
+def test_read_invocation_csv(tmp_path):
+    p = tmp_path / "invocations.csv"
+    p.write_text(
+        "HashOwner,HashFunction,d01,d02,d03\n"  # header: no numeric cells
+        "# comment line\n"
+        "own1,funcA,5,6,7,8\n"
+        "own2,funcB,1,0,2,1\n"
+        "3,4,5\n"                          # no leading name cell: skipped
+    )
+    rows = read_invocation_csv(p)
+    assert list(rows) == ["own1:funcA", "own2:funcB"]
+    np.testing.assert_allclose(rows["own1:funcA"], [5.0, 6.0, 7.0, 8.0])
+    empty = tmp_path / "empty.csv"
+    empty.write_text("HashOwner,HashFunction,counts\n")
+    with pytest.raises(ValueError, match="no invocation rows parsed"):
+        read_invocation_csv(empty)
+
+
+def test_scenario_from_trace_round_trip(apps):
+    """Synthetic bursty trace -> Scenario: per-epoch λ follows the trace
+    shape at the template operating point, the bursty row gets a fitted MMPP
+    spec, flat rows stay Poisson, and the doc validates end to end."""
+    n_bins = 64
+    rows = {}
+    # 16-bin period (2 epochs): epoch means alternate, so the replay sees
+    # genuine λ drift on top of the within-epoch burstiness
+    bursty = np.tile([60.0] * 12 + [200.0] * 4, n_bins // 16)
+    rows["r0"] = bursty
+    # flat rows with a mild deterministic ripple: underdispersed (IDC << 1.15)
+    # so the fit must leave them Poisson, yet per-epoch λ is not constant
+    for i in (1, 2, 3):
+        rows[f"r{i}"] = 90.0 + 3.0 * np.sin(np.arange(n_bins) * (i + 1))
+    sc = Scenario.from_trace(tuple(apps), ROOMY, trace=rows, name="azure_synth")
+    assert sc.n_epochs == 8  # 64 bins // 8
+    assert len(sc.events) == sc.n_epochs - 1  # one LambdaSet per later epoch
+    # the bursty row maps (by order) to apps[0] and gets an mmpp spec
+    assert sc.arrival_for(apps[0].name).kind == "mmpp"
+    for a in apps[1:]:
+        assert sc.arrival_for(a.name).kind == "poisson"
+    # template λ pins the whole-trace mean rate per app
+    tl = sc.timeline()
+    for i, a in enumerate(apps):
+        lam_epochs = [st.apps[i].lam for st in tl]
+        assert np.mean(lam_epochs) == pytest.approx(a.lam, rel=0.02)
+    # the bursty app's λ genuinely drifts across epochs (the QD trigger sees it)
+    lam0 = [st.apps[0].lam for st in tl]
+    assert max(lam0) > 1.05 * min(lam0)
+    # and the whole thing replays + validates through the runner (analytic)
+    doc = ScenarioRunner(sc, ["crms", "robust_crms"], backend="analytic").run()
+    assert doc["scenario"]["arrival"][apps[0].name]["kind"] == "mmpp"
+    assert doc["scenario"]["service"] == "exp"
+    rob = doc["policies"]["robust_crms"]["summary"]
+    assert rob["all_feasible"] and rob["all_stable"]
+
+
+def test_scenario_from_trace_errors(apps):
+    with pytest.raises(ValueError, match="trace has no rows"):
+        Scenario.from_trace(tuple(apps), CAPS, trace={})
+    with pytest.raises(ValueError, match="row names do not cover the app names"):
+        Scenario.from_trace(tuple(apps), CAPS, trace={"only": np.ones(32)})
+    rows = {f"r{i}": np.ones(4) for i in range(len(apps))}
+    with pytest.raises(ValueError, match="trace too short"):
+        Scenario.from_trace(tuple(apps), CAPS, trace=rows, n_epochs=8)
+    zero = {f"r{i}": np.zeros(32) for i in range(len(apps))}
+    with pytest.raises(ValueError, match="is all zeros"):
+        Scenario.from_trace(tuple(apps), CAPS, trace=zero)
+
+
+# ----------------------------------------------------------------------------
+# robust_crms
+# ----------------------------------------------------------------------------
+def test_robust_crms_poisson_identity(apps):
+    """No burstiness ratios -> the uncertainty interval collapses and
+    robust_crms IS crms: identical allocation, robust_t = 0."""
+    req = AllocRequest(apps=tuple(apps), caps=CAPS, alpha=1.4, beta=0.2)
+    plain = allocate("crms", req)
+    rob = allocate("robust_crms", req)
+    np.testing.assert_allclose(rob.allocation.n, plain.allocation.n)
+    np.testing.assert_allclose(rob.allocation.r_cpu, plain.allocation.r_cpu)
+    np.testing.assert_allclose(rob.allocation.ws, plain.allocation.ws)
+    assert rob.diagnostics.extra["robust_t"] == 0.0
+    assert rob.diagnostics.extra["robust_ratio_max"] == 1.0
+
+
+def test_robust_crms_provisions_headroom_when_capacity_allows(apps):
+    req = AllocRequest(
+        apps=tuple(apps), caps=ROOMY, alpha=1.4, beta=0.2,
+        extra={"robust": 2.5},
+    )
+    plain = allocate("crms", AllocRequest(apps=tuple(apps), caps=ROOMY,
+                                          alpha=1.4, beta=0.2))
+    rob = allocate("robust_crms", req)
+    assert rob.feasible and rob.stable
+    assert rob.diagnostics.extra["robust_t"] > 0.0
+    assert rob.diagnostics.extra["robust_ratio_max"] == 2.5
+    # worst-case provisioning: strictly more containers, lower true-rate Ws
+    assert rob.allocation.n.sum() > plain.allocation.n.sum()
+    assert rob.allocation.ws.sum() < plain.allocation.ws.sum()
+
+
+def test_robust_crms_backs_off_under_capacity_pressure(apps):
+    """At the paper's constrained caps the inflated solves go infeasible and
+    the ladder degrades gracefully to plain CRMS instead of failing."""
+    req = AllocRequest(
+        apps=tuple(apps), caps=CAPS, alpha=1.4, beta=0.2, extra={"robust": 2.0}
+    )
+    plain = allocate("crms", AllocRequest(apps=tuple(apps), caps=CAPS,
+                                          alpha=1.4, beta=0.2))
+    rob = allocate("robust_crms", req)
+    assert rob.feasible and rob.stable
+    assert rob.diagnostics.extra["robust_t"] == 0.0
+    np.testing.assert_allclose(rob.allocation.n, plain.allocation.n)
+    np.testing.assert_allclose(rob.allocation.ws, plain.allocation.ws)
+
+
+def test_robust_crms_per_app_ratio_map_and_bad_ratio(apps):
+    req = AllocRequest(
+        apps=tuple(apps), caps=ROOMY, alpha=1.4, beta=0.2,
+        extra={"arrival_ratios": {apps[0].name: 2.0}},
+    )
+    rob = allocate("robust_crms", req)
+    assert rob.feasible and rob.stable
+    assert rob.diagnostics.extra["robust_ratio_max"] == 2.0
+    with pytest.raises(ValueError, match="robust_crms ratios must be >= 1"):
+        allocate(
+            "robust_crms",
+            AllocRequest(apps=tuple(apps), caps=ROOMY, extra={"robust": 0.5}),
+        )

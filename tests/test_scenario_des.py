@@ -260,12 +260,47 @@ def test_validator_schema_v2(des_doc):
         validate_scenarios_doc(bad)
 
 
+def test_validator_schema_22_arrival_service_laws(des_doc):
+    """Schema 2.2: the arrival/service law fields are validated — an unknown
+    kind is an ERROR, never a silent pass (the old validator ignored them)."""
+    from repro.core.arrivals import mmpp2
+
+    # a real spec validates, in both row and compact shapes
+    ok = copy.deepcopy(des_doc)
+    ok["scenario"]["arrival"] = mmpp2(3.0, 0.2, 60.0).to_dict()
+    validate_scenarios_doc(ok)
+    validate_scenarios_doc(compact_scenarios_doc(ok))
+    ok["scenario"]["arrival"] = {"app_a": mmpp2(2.0, 0.1, 30.0).to_dict()}
+    validate_scenarios_doc(ok)
+    # unknown service law
+    bad = copy.deepcopy(des_doc)
+    bad["scenario"]["service"] = "pareto"
+    with pytest.raises(ValueError, match="scenario.service"):
+        validate_scenarios_doc(bad)
+    # unknown arrival kind — whole-fleet spec and per-app mapping
+    bad = copy.deepcopy(des_doc)
+    bad["scenario"]["arrival"] = {"kind": "selfsimilar"}
+    with pytest.raises(ValueError, match="must be one of"):
+        validate_scenarios_doc(bad)
+    bad["scenario"]["arrival"] = {"app_a": {"kind": "selfsimilar"}}
+    with pytest.raises(ValueError, match=r"arrival\[app_a\].kind"):
+        validate_scenarios_doc(bad)
+    # malformed mmpp phase lists
+    bad["scenario"]["arrival"] = {"kind": "mmpp", "rates": [1.0], "sojourn": [2.0]}
+    with pytest.raises(ValueError, match="matching rates/sojourn lists"):
+        validate_scenarios_doc(bad)
+    # an empty per-app mapping is ambiguous — null means Poisson
+    bad["scenario"]["arrival"] = {}
+    with pytest.raises(ValueError, match="non-empty"):
+        validate_scenarios_doc(bad)
+
+
 # ----------------------------------------------------------------------------
 # Compact parallel-array storage shape (schema 2.1)
 # ----------------------------------------------------------------------------
 def test_compact_doc_roundtrip_and_validation(des_doc):
     compact = compact_scenarios_doc(des_doc)
-    assert compact["schema_minor"] == 1
+    assert compact["schema_minor"] == 2
     pol = compact["policies"]["crms"]
     assert "epochs" not in pol and "epochs_columns" in pol
     cols = pol["epochs_columns"]
